@@ -1,0 +1,74 @@
+"""Shared benchmark infra: cached EAT pipeline runs + CSV emission.
+
+Each (dataset, method, parts, ablation) configuration runs once; results are
+cached as JSON under results/bench_cache so Tables II/III/IV and Fig. 3 can
+share runs.  Scales are the CPU-feasible stand-ins from graph/synthetic.py;
+every emitted row carries the dataset name so the scale caveat is explicit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+
+from repro.pipeline import EATConfig, EATResult, run_eat_distgnn
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench_cache")
+
+# benchmark-wide training scale (kept modest: single CPU core)
+BENCH_EPOCHS = 24
+BENCH_HIDDEN = 64
+BENCH_BATCH = 256
+BENCH_FANOUT = (5, 5)
+
+
+# paper §IV: "For Flickr, we don't use the sampler" (too few nodes/epoch)
+NO_CBS_DATASETS = {"flickr-s"}
+
+
+def bench_config(dataset: str, *, method: str = "ew", parts: int = 4,
+                 use_cbs: bool = True, use_gp: bool = True,
+                 centralized: bool = False, seed: int = 0,
+                 max_epochs: int | None = None) -> EATConfig:
+    if dataset in NO_CBS_DATASETS:
+        use_cbs = False
+    if max_epochs is None:
+        # a CBS "epoch" is a 25% mini-epoch — the paper runs the SAME epoch
+        # count in both regimes (mini-epochs are simply ~4x cheaper), so CBS
+        # configs get a proportionally larger epoch cap; early stopping and
+        # the training-TIME metric keep the comparison honest
+        max_epochs = BENCH_EPOCHS * 3 if use_cbs else BENCH_EPOCHS
+    return EATConfig(
+        dataset=dataset, num_parts=parts, partition_method=method,
+        use_cbs=use_cbs, use_gp=use_gp, centralized=centralized,
+        max_epochs=max_epochs, hidden_dim=BENCH_HIDDEN,
+        batch_size=BENCH_BATCH, fanouts=BENCH_FANOUT, lr=3e-3, seed=seed,
+    )
+
+
+def _key(cfg: EATConfig) -> str:
+    blob = json.dumps(dataclasses.asdict(cfg), sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def cached_run(cfg: EATConfig, verbose: bool = False) -> dict:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, _key(cfg) + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    result = run_eat_distgnn(cfg, verbose=verbose)
+    payload = result.summary()
+    payload["loss_history"] = result.loss_history
+    payload["val_history"] = result.val_history
+    payload["per_partition_micro"] = result.per_partition_micro.tolist()
+    payload["partition_entropies"] = result.partition_entropies.tolist()
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return payload
+
+
+def emit(table: str, fields: dict) -> None:
+    kv = ",".join(f"{k}={v}" for k, v in fields.items())
+    print(f"{table},{kv}")

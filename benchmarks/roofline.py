@@ -1,0 +1,49 @@
+"""Roofline table from the dry-run JSON dumps (results/dryrun_*.json):
+per (arch × shape × mesh) the three terms, the dominant bottleneck, and the
+MODEL_FLOPS/HLO_FLOPs usefulness ratio."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def rows(path: str):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> None:
+    for fname, mesh in (("dryrun_1pod.json", "16x16"),
+                        ("dryrun_2pod.json", "2x16x16")):
+        for r in rows(os.path.join(RESULTS, fname)):
+            if r.get("status") == "skipped":
+                emit("roofline", {"mesh": mesh, "arch": r["arch"],
+                                  "shape": r["shape"], "status": "skipped",
+                                  "reason": r.get("reason", "")})
+                continue
+            if r.get("status") != "ok":
+                emit("roofline", {"mesh": mesh, "arch": r.get("arch"),
+                                  "shape": r.get("shape"), "status": "error"})
+                continue
+            emit("roofline", {
+                "mesh": mesh, "arch": r["arch"], "shape": r["shape"],
+                "variant": r.get("variant", "base"),
+                "compute_s": f"{r['compute_s']:.3e}",
+                "memory_s": f"{r['memory_s']:.3e}",
+                "collective_s": f"{r['collective_s']:.3e}",
+                "dominant": r["dominant"],
+                "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+                "hbm_gb_per_chip": round(
+                    (r.get("argument_bytes") or 0) / 1e9
+                    + (r.get("temp_bytes") or 0) / 1e9, 2),
+            })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Table II: DistDGL baseline (METIS, full epochs, no personalization) vs
+EW+GP+CBS on each benchmark — micro/weighted F1, train time, speedup."""
+from __future__ import annotations
+
+from .common import bench_config, cached_run, emit
+
+DATASETS = ("flickr-s", "reddit-s", "products-s", "papers-s")
+
+
+def main() -> None:
+    for ds in DATASETS:
+        base = cached_run(bench_config(ds, method="metis", use_cbs=False,
+                                       use_gp=False))
+        ours = cached_run(bench_config(ds, method="ew", use_cbs=True,
+                                       use_gp=True))
+        speedup = (base["train_time_s"] / ours["train_time_s"]
+                   if ours["train_time_s"] else float("nan"))
+        emit("table2", {
+            "dataset": ds,
+            "baseline_micro": base["micro_f1"],
+            "ours_micro": ours["micro_f1"],
+            "baseline_weighted": base["weighted_f1"],
+            "ours_weighted": ours["weighted_f1"],
+            "baseline_train_s": base["train_time_s"],
+            "ours_train_s": ours["train_time_s"],
+            "speedup": round(speedup, 2),
+            "micro_delta": round(ours["micro_f1"] - base["micro_f1"], 2),
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table III: scaling with 4/8/16 partitions on the products stand-in —
+training time, epoch time and micro-F1 for DistDGL vs EW+GP+CBS."""
+from __future__ import annotations
+
+from .common import bench_config, cached_run, emit
+
+
+def main() -> None:
+    for parts in (4, 8, 16):
+        base = cached_run(bench_config("products-s", method="metis", parts=parts,
+                                       use_cbs=False, use_gp=False))
+        ours = cached_run(bench_config("products-s", method="ew", parts=parts,
+                                       use_cbs=True, use_gp=True))
+        emit("table3", {
+            "parts": parts,
+            "baseline_train_s": base["train_time_s"],
+            "ours_train_s": ours["train_time_s"],
+            "baseline_epoch_s": base["epoch_time_s"],
+            "ours_epoch_s": ours["epoch_time_s"],
+            "baseline_micro": base["micro_f1"],
+            "ours_micro": ours["micro_f1"],
+            "epoch_speedup": round(base["epoch_time_s"] /
+                                   max(ours["epoch_time_s"], 1e-9), 2),
+        })
+
+
+if __name__ == "__main__":
+    main()

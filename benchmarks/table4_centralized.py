@@ -1,0 +1,27 @@
+"""Table IV: centralized GraphSAGE vs DistDGL vs EW+GP+CBS (micro-F1)."""
+from __future__ import annotations
+
+from .common import bench_config, cached_run, emit
+
+DATASETS = ("flickr-s", "reddit-s", "products-s")
+
+
+def main() -> None:
+    for ds in DATASETS:
+        central = cached_run(bench_config(ds, centralized=True, use_gp=False,
+                                          use_cbs=False, method="metis"))
+        base = cached_run(bench_config(ds, method="metis", use_cbs=False,
+                                       use_gp=False))
+        ours = cached_run(bench_config(ds, method="ew", use_cbs=True,
+                                       use_gp=True))
+        emit("table4", {
+            "dataset": ds,
+            "centralized_micro": central["micro_f1"],
+            "distdgl_micro": base["micro_f1"],
+            "ours_micro": ours["micro_f1"],
+            "ours_beats_centralized": ours["micro_f1"] >= central["micro_f1"],
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Render EXPERIMENTS.md tables from results/dryrun_*.json + bench cache.
+
+    PYTHONPATH=src python scripts/render_experiments.py
+prints markdown snippets to paste into EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    p = os.path.join(RESULTS, path)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(rows, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | variant | status | compile_s | HBM GB/chip "
+          "(arg+tmp) | coll bytes/chip |")
+    print("|---|---|---|---|---|---|---|")
+    seen = set()
+    for r in rows:
+        key = (r.get("arch"), r.get("shape"))
+        if key in seen:
+            continue
+        seen.add(key)
+        if r.get("status") != "ok":
+            print(f"| {r.get('arch')} | {r.get('shape')} | - | "
+                  f"{r.get('status')}: {str(r.get('reason') or r.get('error'))[:60]} | - | - | - |")
+            continue
+        hbm = ((r.get("argument_bytes") or 0) + (r.get("temp_bytes") or 0)) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r.get('variant','base')} | ok | "
+              f"{r.get('compile_s', 0):.0f} | {hbm:.2f} | "
+              f"{r.get('coll_bytes_per_chip', 0):.3g} |")
+
+
+SHAPE_TOKENS = {"train_4k": (4096 * 256, 6.0), "prefill_32k": (32768 * 32, 2.0),
+                "decode_32k": (128, 2.0), "long_500k": (1, 2.0)}
+
+
+def useful_ratio(r) -> float:
+    """Recompute MODEL_FLOPS/HLO_FLOPS uniformly: 6·N·D train, 2·N·D serve."""
+    tokens, factor = SHAPE_TOKENS[r["shape"]]
+    model = factor * r["active_params"] * tokens
+    total_hlo = r["hlo_flops_per_chip"] * r["chips"]
+    return model / total_hlo if total_hlo else 0.0
+
+
+def roofline_table(rows):
+    print("\n### Roofline (single-pod, per chip)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          "useful ratio | what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|")
+    seen = set()
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        hint = suggest(r)
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"**{r['dominant']}** | {useful_ratio(r):.3f} | {hint} |")
+
+
+def suggest(r) -> str:
+    dom = r["dominant"]
+    ratio = r["useful_flops_ratio"]
+    if dom == "compute" and ratio < 0.5:
+        return "cut replicated/remat compute (resharding or remat policy)"
+    if dom == "compute":
+        return "already compute-bound; larger per-chip batch or better MXU tiling"
+    if dom == "memory":
+        if r["shape"].startswith("decode"):
+            return "decode is weight/cache-bandwidth bound; batch more requests per chip or quantize KV"
+        return "fuse/reduce activation traffic (bigger attention tiles, fewer reshards)"
+    if dom == "collective":
+        return "reshard to cut all-gathers (e.g. no seq-shard residual) or overlap collectives"
+    return "-"
+
+
+def main():
+    rows1 = load("dryrun_1pod.json")
+    rows2 = load("dryrun_2pod.json")
+    dryrun_table(rows1, "Dry-run — single pod (16x16 = 256 chips)")
+    dryrun_table(rows2, "Dry-run — multi-pod (2x16x16 = 512 chips)")
+    roofline_table(rows1)
+
+
+if __name__ == "__main__":
+    main()

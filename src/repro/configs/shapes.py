@@ -1,0 +1,85 @@
+"""The four assigned input shapes and ShapeDtypeStruct input builders.
+
+Decode shapes lower ``serve_step`` (ONE token, KV cache of seq_len);
+``long_500k`` additionally requires a sub-quadratic path (see DESIGN.md
+long_500k policy: native for ssm/hybrid/SWA archs, explicit ``swa``
+serving variant for the full-attention archs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.transformer import Transformer
+
+__all__ = ["InputShape", "SHAPES", "input_specs", "decode_cache_width"]
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def decode_cache_width(cfg: ModelConfig, shape: InputShape) -> tuple[int, bool]:
+    """(cache width, rolling?) for a decode shape under this config.
+
+    Archs with a sliding window keep a mod-W rolling cache of W slots;
+    full-attention archs keep the whole context.
+    """
+    if cfg.sliding_window is not None and cfg.sliding_window < shape.seq_len:
+        return cfg.sliding_window, True
+    return shape.seq_len, False
+
+
+def _token_struct(b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    For train/prefill: the batch dict.  For decode: (token, caches,
+    cache_len) matching ``Transformer.decode_step``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    act_dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        s_text = s - cfg.prefix_tokens
+        batch: dict = {"tokens": _token_struct(b, s_text)}
+        if shape.kind == "train":
+            batch["labels"] = _token_struct(b, s_text)
+        if cfg.prefix_tokens:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_tokens, cfg.d_model), act_dt)
+        if cfg.is_encoder_decoder:
+            batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), act_dt)
+        return batch
+
+    # decode: one token against a cache of seq_len context
+    model = Transformer(cfg)
+    width, rolling = decode_cache_width(cfg, shape)
+    caches = jax.eval_shape(
+        lambda: model.make_decode_cache(b, width,
+                                        enc_seq=cfg.encoder_seq or None))
+    return {
+        "token": _token_struct(b, 1),
+        "caches": caches,
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+        "rolling": rolling,
+    }

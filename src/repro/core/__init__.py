@@ -1,0 +1,25 @@
+# The paper's primary contribution: entropy-aware partitioning (EW),
+# class-balanced sampling (CBS), and generalize-then-personalize training
+# (GP) as composable, model-agnostic framework features.
+from .entropy import PartitionStats, label_entropy, partition_entropies, partition_stats
+from .partition import PartitionResult, assign_edge_weights, metis_kway, partition_graph
+from .sampler import CBSampler, cbs_probabilities
+from .gp import (
+    EarlyStopper,
+    GPController,
+    GPHyperParams,
+    GPScheduleConfig,
+    broadcast_to_partitions,
+    loss_flattened,
+    make_generalize_step,
+    make_personalize_step,
+)
+
+__all__ = [
+    "label_entropy", "partition_entropies", "partition_stats", "PartitionStats",
+    "partition_graph", "PartitionResult", "assign_edge_weights", "metis_kway",
+    "CBSampler", "cbs_probabilities",
+    "GPController", "GPScheduleConfig", "GPHyperParams", "EarlyStopper",
+    "loss_flattened", "make_generalize_step", "make_personalize_step",
+    "broadcast_to_partitions",
+]

@@ -1,0 +1,13 @@
+from .schedule import EarlyStopper, GPController, GPScheduleConfig, loss_flattened
+from .trainer import (
+    GPHyperParams,
+    make_generalize_step,
+    make_personalize_step,
+    broadcast_to_partitions,
+)
+
+__all__ = [
+    "EarlyStopper", "GPController", "GPScheduleConfig", "loss_flattened",
+    "GPHyperParams", "make_generalize_step", "make_personalize_step",
+    "broadcast_to_partitions",
+]

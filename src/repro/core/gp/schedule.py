@@ -1,0 +1,140 @@
+"""GP phase scheduling + early stopping (paper §III-C).
+
+Phase-0 (generalization) runs until the loss curve "starts to flatten"
+(Fig. 3's magenta line) or its own early stop fires on the *average*
+validation micro-F1 across partitions — all hosts switch together.
+
+Phase-1 (personalization) runs per-host: each partition's *own* validation
+micro-F1 drives its early stop independently, and each keeps its own best
+model.  Under SPMD this is a boolean `active` vector gating updates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["loss_flattened", "EarlyStopper", "GPScheduleConfig", "GPController"]
+
+
+def loss_flattened(history: list[float] | np.ndarray, window: int = 5, tol: float = 0.02) -> bool:
+    """True when the mean relative improvement over the last ``window``
+    epochs drops below ``tol`` — the paper's personalization trigger."""
+    h = np.asarray(history, dtype=np.float64)
+    if len(h) < window + 1:
+        return False
+    recent = h[-(window + 1):]
+    prev, cur = recent[:-1], recent[1:]
+    rel = (prev - cur) / np.maximum(np.abs(prev), 1e-12)
+    return bool(rel.mean() < tol)
+
+
+@dataclass
+class EarlyStopper:
+    """Maximising early-stopper with patience, tracking the best epoch."""
+
+    patience: int = 5
+    min_delta: float = 0.0
+    best: float = -np.inf
+    best_epoch: int = -1
+    bad_epochs: int = 0
+    stopped: bool = False
+
+    def update(self, value: float, epoch: int) -> bool:
+        """Feed one validation score; returns True if this is a new best."""
+        if self.stopped:
+            return False
+        if value > self.best + self.min_delta:
+            self.best = value
+            self.best_epoch = epoch
+            self.bad_epochs = 0
+            return True
+        self.bad_epochs += 1
+        if self.bad_epochs > self.patience:
+            self.stopped = True
+        return False
+
+
+@dataclass
+class GPScheduleConfig:
+    max_epochs: int = 100
+    flatten_window: int = 5
+    flatten_tol: float = 0.02
+    phase0_patience: int = 8
+    phase1_patience: int = 5
+    min_phase0_epochs: int = 3
+    # optional hard split: fraction of max_epochs spent generalizing
+    # (the paper's "parameter controls the proportion"); None = loss-driven
+    phase0_fraction: float | None = None
+
+
+@dataclass
+class GPController:
+    """Host-side state machine driving the two phases for N partitions."""
+
+    num_partitions: int
+    config: GPScheduleConfig = field(default_factory=GPScheduleConfig)
+    phase: int = 0
+    epoch: int = 0
+    loss_history: list[float] = field(default_factory=list)
+    phase0_stopper: EarlyStopper = field(init=False)
+    phase1_stoppers: list[EarlyStopper] = field(init=False)
+    personalize_start_epoch: int = -1
+
+    def __post_init__(self) -> None:
+        self.phase0_stopper = EarlyStopper(patience=self.config.phase0_patience)
+        self.phase1_stoppers = [
+            EarlyStopper(patience=self.config.phase1_patience)
+            for _ in range(self.num_partitions)
+        ]
+
+    # -- phase-0 -----------------------------------------------------------
+    def record_phase0(self, mean_loss: float, mean_val_micro_f1: float) -> bool:
+        """Record one generalization epoch.  Returns True when this epoch's
+        global model is the best so far (caller snapshots W^G)."""
+        assert self.phase == 0
+        self.loss_history.append(float(mean_loss))
+        is_best = self.phase0_stopper.update(float(mean_val_micro_f1), self.epoch)
+        self.epoch += 1
+        return is_best
+
+    def should_personalize(self) -> bool:
+        if self.phase != 0 or self.epoch < self.config.min_phase0_epochs:
+            return False
+        if self.config.phase0_fraction is not None:
+            return self.epoch >= int(self.config.phase0_fraction * self.config.max_epochs)
+        return (
+            loss_flattened(self.loss_history, self.config.flatten_window, self.config.flatten_tol)
+            or self.phase0_stopper.stopped
+        )
+
+    def start_personalization(self) -> None:
+        assert self.phase == 0
+        self.phase = 1
+        self.personalize_start_epoch = self.epoch
+
+    # -- phase-1 -----------------------------------------------------------
+    def record_phase1(self, per_partition_val_micro_f1: np.ndarray) -> np.ndarray:
+        """Record one personalization epoch.  Returns a bool array marking
+        partitions whose current model is their new best (caller snapshots
+        those personal models)."""
+        assert self.phase == 1
+        scores = np.asarray(per_partition_val_micro_f1, dtype=np.float64)
+        is_best = np.zeros(self.num_partitions, dtype=bool)
+        for i, stopper in enumerate(self.phase1_stoppers):
+            is_best[i] = stopper.update(float(scores[i]), self.epoch)
+        self.epoch += 1
+        return is_best
+
+    @property
+    def active_partitions(self) -> np.ndarray:
+        """Bool mask of partitions still training in phase-1 ('async' stop)."""
+        return np.array([not s.stopped for s in self.phase1_stoppers])
+
+    @property
+    def done(self) -> bool:
+        if self.epoch >= self.config.max_epochs:
+            return True
+        if self.phase == 1:
+            return not self.active_partitions.any()
+        return False

@@ -1,0 +1,124 @@
+"""GP train-step builders — the paper's two synchronisation regimes as jit-
+able step functions, agnostic to the model (GraphSAGE or any zoo transformer).
+
+Phase-0 "generalize": classic data-parallel SGD — local grads, `lax.pmean`
+over the data axes, identical update everywhere.  One logical copy of W^G.
+
+Phase-1 "personalize": NO cross-partition gradient traffic.  Parameters gain
+a leading ``partitions`` axis (sharded over the data axes on the production
+mesh); every partition descends its own loss plus the Eq. 4 proximal pull
+toward the frozen W^G.  A boolean ``active`` vector freezes partitions whose
+early stop fired — the SPMD rendering of the paper's "each host stops
+independently" (communication-asynchrony is what the paper actually exploits;
+see DESIGN.md §2).
+
+Both builders work:
+  · single-device (axis_names=()) — unit tests, centralized baseline;
+  · inside shard_map over the production mesh (axis_names=("pod","data")).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ...train.losses import prox_penalty
+from ...train.optim import OptState, apply_updates
+
+__all__ = [
+    "GPHyperParams",
+    "make_generalize_step",
+    "make_personalize_step",
+    "broadcast_to_partitions",
+]
+
+PyTree = Any
+# loss_fn(params, batch) -> scalar loss
+LossFn = Callable[[PyTree, Any], jnp.ndarray]
+
+
+@dataclass(frozen=True)
+class GPHyperParams:
+    lambda_prox: float = 0.01      # Eq. 4 λ
+    use_prox: bool = True
+
+
+def make_generalize_step(
+    loss_fn: LossFn,
+    optimizer,
+    axis_names: Sequence[str] = (),
+) -> Callable:
+    """Phase-0 step: (params, opt_state, batch) -> (params, opt_state, loss).
+
+    With ``axis_names`` non-empty the step must run inside shard_map/pmap
+    over those mesh axes; grads and loss are pmean'd across them, keeping
+    every replica's W^G bit-identical (the paper's synchronous phase).
+    """
+
+    def step(params: PyTree, opt_state: OptState, batch: Any):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        for ax in axis_names:
+            grads = jax.lax.pmean(grads, ax)
+            loss = jax.lax.pmean(loss, ax)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_personalize_step(
+    loss_fn: LossFn,
+    optimizer,
+    hp: GPHyperParams = GPHyperParams(),
+) -> Callable:
+    """Phase-1 step over per-partition params.
+
+    Signature: (params_p, opt_state_p, batch_p, global_params, active_p)
+             -> (params_p, opt_state_p, loss_p)
+
+    All ``*_p`` arguments carry a leading ``partitions`` axis; the step is
+    vmapped over it, so under pjit the partition axis shards over the data
+    mesh axes and each shard group trains its own replica with ZERO
+    cross-partition collectives — the paper's communication saving.
+
+    ``active_p`` (bool per partition) masks both the parameter update and the
+    optimizer-state advance once that partition early-stops.
+    """
+
+    def one_partition(params, opt_state, batch, global_params, active):
+        def total_loss(p):
+            base = loss_fn(p, batch)
+            if hp.use_prox:
+                g = jax.lax.stop_gradient(global_params)
+                base = base + hp.lambda_prox * prox_penalty(p, g)
+            return base
+
+        loss, grads = jax.value_and_grad(total_loss)(params)
+        updates, new_opt_state = optimizer.update(grads, opt_state, params)
+        gate = active.astype(jnp.float32)
+        new_params = jax.tree.map(
+            lambda p, u: p + u * gate.astype(u.dtype), params, updates
+        )
+        sel = lambda new, old: jnp.where(active, new, old)
+        kept_opt_state = jax.tree.map(sel, new_opt_state, opt_state)
+        return new_params, kept_opt_state, loss
+
+    # every per-partition arg (params, opt state incl. step counter, batch,
+    # active flag) carries a leading partition axis; init the opt state with
+    # jax.vmap(optimizer.init)(params_p) to get the batched step counter
+    vstep = jax.vmap(one_partition, in_axes=(0, 0, 0, None, 0))
+
+    def step(params_p, opt_state_p, batch_p, global_params, active_p):
+        return vstep(params_p, opt_state_p, batch_p, global_params, active_p)
+
+    return step
+
+
+def broadcast_to_partitions(params: PyTree, num_partitions: int) -> PyTree:
+    """W^G -> stacked per-partition W^P initialisation (phase transition)."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (num_partitions,) + p.shape), params
+    )

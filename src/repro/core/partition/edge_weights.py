@@ -1,0 +1,70 @@
+"""Algorithm 1 — Edge-Weighted graph construction (the EW in EW+GP+CBS).
+
+For every directed edge (u, v) in the CSR graph:
+
+    similarity = <x_u, x_v>                    (dot of initial features)
+    p          = 1 - exp(-K / |N(v)|)          (prob. u is among the K
+                                                GraphSAGE-sampled neighbours)
+    W_uv       = (c * similarity + p) * 100
+
+Nodes with similar features (and hence, usually, labels) get heavy edges, so
+a weighted min-cut partitioner keeps them together — lowering per-partition
+label entropy.  Low-degree nodes keep their neighbourhood local (p ≈ 1),
+cutting halo-exchange volume.
+
+The paper's METIS backend needs positive integer weights; we clamp/round the
+same way.  Complexity O(|E| · D), fully vectorised here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["assign_edge_weights", "edge_endpoints"]
+
+
+def edge_endpoints(indptr: np.ndarray, indices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """CSR -> (src, dst) arrays. Row u holds the *in*-neighbourhood N(u)."""
+    dst = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+    src = indices
+    return src, dst
+
+
+def assign_edge_weights(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    features: np.ndarray,
+    *,
+    fanout_k: int = 25,
+    c: float = 1.0,
+    normalize_features: bool = True,
+    block: int = 1 << 20,
+) -> np.ndarray:
+    """Edge weights per Algorithm 1, aligned with the CSR ``indices`` array.
+
+    ``fanout_k`` is the GraphSAGE neighbour-sample size K (paper uses 25).
+    ``c`` trades feature similarity against locality; it is the paper's graph-
+    dependent hyper-parameter.  ``normalize_features`` applies L2 row
+    normalisation first, keeping the dot product in [-1, 1] so a single ``c``
+    works across datasets (raw OGB features have wildly varying norms; the
+    paper tunes ``c`` per graph instead).
+    """
+    feats = np.asarray(features, dtype=np.float64)
+    if normalize_features:
+        norms = np.linalg.norm(feats, axis=1, keepdims=True)
+        feats = feats / np.maximum(norms, 1e-12)
+
+    src, dst = edge_endpoints(indptr, indices)
+    deg = np.diff(indptr).astype(np.float64)  # |N(v)| for destination v
+    p = 1.0 - np.exp(-float(fanout_k) / np.maximum(deg, 1.0))
+
+    weights = np.empty(len(src), dtype=np.float64)
+    # blocked so the (E, D) gather never materialises for huge graphs
+    for lo in range(0, len(src), block):
+        hi = min(lo + block, len(src))
+        sim = np.einsum(
+            "ed,ed->e", feats[src[lo:hi]], feats[dst[lo:hi]], optimize=True
+        )
+        weights[lo:hi] = (c * sim + p[dst[lo:hi]]) * 100.0
+
+    # METIS requires strictly positive integer weights.
+    return np.maximum(np.rint(weights), 1.0).astype(np.int64)

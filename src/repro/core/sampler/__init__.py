@@ -1,0 +1,3 @@
+from .cbs import CBSampler, cbs_probabilities
+
+__all__ = ["CBSampler", "cbs_probabilities"]

@@ -1,0 +1,6 @@
+from .corpus import DomainCorpus, CorpusSpec
+from .partition import shard_corpus_by_entropy, CorpusShards
+from .pipeline import ShardedBatcher
+
+__all__ = ["DomainCorpus", "CorpusSpec", "shard_corpus_by_entropy",
+           "CorpusShards", "ShardedBatcher"]

@@ -1,0 +1,11 @@
+from .csr import CSRGraph
+from .synthetic import SyntheticSpec, make_benchmark, BENCHMARKS
+from .sampling import NeighborSampler, SampledBlocks
+from .sage import GraphSAGE, SAGEParams
+from .distributed import PartitionedGraph, build_partitioned_graph, make_distributed_forward
+
+__all__ = [
+    "CSRGraph", "SyntheticSpec", "make_benchmark", "BENCHMARKS",
+    "NeighborSampler", "SampledBlocks", "GraphSAGE", "SAGEParams",
+    "PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
+]

@@ -1,0 +1,147 @@
+"""GraphSAGE (Hamilton et al. 2017) in pure JAX — the paper's model (§II).
+
+Eq. 1–2 with the mean aggregator:
+
+    h_N(v) = mean(h_u, u in sampled N(v))
+    h_v    = sigma(W · concat(h_N(v), h_v))
+
+Two apply paths:
+  · ``apply_sampled`` — fixed-shape minibatch blocks from NeighborSampler
+    (the DistDGL training path, 2 layers as the paper fixes).
+  · ``apply_full``    — full-graph inference over edge lists using segment
+    aggregation (evaluation / centralized baseline; this is the compute
+    hot-spot the Pallas ``segment_agg`` kernel accelerates).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SAGEParams", "GraphSAGE"]
+
+
+class SAGELayer(NamedTuple):
+    w_self: jnp.ndarray   # (d_in, d_out)
+    w_neigh: jnp.ndarray  # (d_in, d_out)
+    b: jnp.ndarray        # (d_out,)
+
+
+class SAGEParams(NamedTuple):
+    layer1: SAGELayer
+    layer2: SAGELayer
+
+
+def _glorot(rng: np.random.Generator, shape: tuple[int, ...]) -> jnp.ndarray:
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = np.sqrt(6.0 / (fan_in + fan_out))
+    return jnp.asarray(rng.uniform(-scale, scale, size=shape), dtype=jnp.float32)
+
+
+@dataclass(frozen=True)
+class GraphSAGE:
+    """Config + functional apply (params are explicit pytrees)."""
+
+    feature_dim: int
+    hidden_dim: int
+    num_classes: int
+    l2_normalize: bool = False
+    dropout: float = 0.0  # applied to inputs of each layer when training
+
+    # ---------------------------------------------------------------- init
+    def init(self, seed: int = 0) -> SAGEParams:
+        rng = np.random.default_rng([seed, 0x5A6E])
+        d, h, c = self.feature_dim, self.hidden_dim, self.num_classes
+
+        def layer(d_in: int, d_out: int) -> SAGELayer:
+            return SAGELayer(
+                w_self=_glorot(rng, (d_in, d_out)),
+                w_neigh=_glorot(rng, (d_in, d_out)),
+                b=jnp.zeros((d_out,), jnp.float32),
+            )
+
+        return SAGEParams(layer1=layer(d, h), layer2=layer(h, c))
+
+    # ------------------------------------------------------------- helpers
+    def _layer(self, lp: SAGELayer, h_self: jnp.ndarray, h_neigh: jnp.ndarray,
+               activate: bool) -> jnp.ndarray:
+        out = h_self @ lp.w_self + h_neigh @ lp.w_neigh + lp.b
+        if activate:
+            out = jax.nn.relu(out)
+            if self.l2_normalize:
+                out = out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+        return out
+
+    def _maybe_dropout(self, x: jnp.ndarray, key) -> jnp.ndarray:
+        if self.dropout <= 0.0 or key is None:
+            return x
+        keep = 1.0 - self.dropout
+        mask = jax.random.bernoulli(key, keep, x.shape)
+        return jnp.where(mask, x / keep, 0.0)
+
+    # ------------------------------------------------------- sampled apply
+    def apply_sampled(
+        self,
+        params: SAGEParams,
+        x_t: jnp.ndarray,   # (B, D) target features
+        x_1: jnp.ndarray,   # (B, F1, D) their sampled neighbours
+        x_2: jnp.ndarray,   # (B, F1, F2, D) second-hop samples
+        dropout_key=None,
+    ) -> jnp.ndarray:
+        """Two-layer sampled forward -> (B, num_classes) logits."""
+        k1 = k2 = None
+        if dropout_key is not None:
+            k1, k2 = jax.random.split(dropout_key)
+        x_t = self._maybe_dropout(x_t, k1)
+
+        # layer 1 for targets: aggregate their 1-hop samples
+        h1_t = self._layer(params.layer1, x_t, x_1.mean(axis=1), activate=True)
+        # layer 1 for 1-hop nodes: aggregate the 2-hop samples
+        h1_1 = self._layer(params.layer1, x_1, x_2.mean(axis=2), activate=True)
+        h1_1 = self._maybe_dropout(h1_1, k2)
+        # layer 2 for targets
+        logits = self._layer(params.layer2, h1_t, h1_1.mean(axis=1), activate=False)
+        return logits
+
+    # ---------------------------------------------------------- full apply
+    def apply_full(
+        self,
+        params: SAGEParams,
+        features: jnp.ndarray,     # (N, D)
+        edge_src: jnp.ndarray,     # (E,) message sources
+        edge_dst: jnp.ndarray,     # (E,) message destinations
+        num_nodes: int,
+        segment_agg=None,          # optional kernel override (ops.segment_mean)
+    ) -> jnp.ndarray:
+        """Full-graph 2-layer forward -> (N, num_classes) logits."""
+
+        def mean_agg(h: jnp.ndarray) -> jnp.ndarray:
+            if segment_agg is not None:
+                return segment_agg(h, edge_src, edge_dst, num_nodes)
+            s = jax.ops.segment_sum(h[edge_src], edge_dst, num_segments=num_nodes)
+            deg = jax.ops.segment_sum(
+                jnp.ones_like(edge_dst, dtype=h.dtype), edge_dst, num_segments=num_nodes
+            )
+            return s / jnp.maximum(deg, 1.0)[:, None]
+
+        h1 = self._layer(params.layer1, features, mean_agg(features), activate=True)
+        logits = self._layer(params.layer2, h1, mean_agg(h1), activate=False)
+        return logits
+
+    # ------------------------------------------------------------ loss fns
+    def make_loss_fn(self, loss="ce", focal_gamma: float = 2.0):
+        """loss_fn(params, batch) for the GP trainer.  batch = dict with
+        x_t, x_1, x_2, labels (and optional mask for padded batches)."""
+        from ..train.losses import cross_entropy_loss, focal_loss
+
+        def loss_fn(params: SAGEParams, batch: dict[str, Any]) -> jnp.ndarray:
+            logits = self.apply_sampled(params, batch["x_t"], batch["x_1"], batch["x_2"])
+            mask = batch.get("mask")
+            if loss == "focal":
+                return focal_loss(logits, batch["labels"], gamma=focal_gamma, mask=mask)
+            return cross_entropy_loss(logits, batch["labels"], mask=mask)
+
+        return loss_fn

@@ -1,0 +1,67 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; the launch
+configs flip it to False on real TPU hardware.  Every wrapper has the same
+signature as its `ref.py` oracle so call sites (and tests) can swap them 1:1.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rmsnorm_pallas
+from .segment_agg import EdgeBlocks, build_edge_blocks, segment_agg_pallas
+
+__all__ = [
+    "segment_agg", "make_segment_agg", "flash_attention", "rmsnorm",
+    "build_edge_blocks", "EdgeBlocks",
+]
+
+
+def make_segment_agg(indptr: np.ndarray, indices: np.ndarray, *, mean: bool = True,
+                     interpret: bool = True, use_pallas: bool = True):
+    """Bind the static CSR block structure once per graph; returns
+    ``agg(x) -> (N, D)`` suitable for jit closure."""
+    if not use_pallas:
+        src = jnp.asarray(indices)
+        dst = jnp.asarray(np.repeat(np.arange(len(indptr) - 1), np.diff(indptr)))
+        n = len(indptr) - 1
+        return lambda x: ref.segment_agg_ref(x, src, dst, n, mean=mean)
+
+    blocks = build_edge_blocks(np.asarray(indptr), np.asarray(indices))
+    src_flat = jnp.asarray(blocks.src.reshape(-1))
+    n = blocks.num_nodes
+
+    def agg(x: jnp.ndarray) -> jnp.ndarray:
+        msgs = x[src_flat]  # XLA gather (per-block layout)
+        out = segment_agg_pallas(msgs, blocks, mean=mean, interpret=interpret)
+        return out[:n]
+
+    return agg
+
+
+def segment_agg(x, indptr, indices, *, mean: bool = True, interpret: bool = True):
+    """One-shot convenience (rebuilds block structure; prefer make_segment_agg)."""
+    return make_segment_agg(np.asarray(indptr), np.asarray(indices), mean=mean,
+                            interpret=interpret)(x)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "interpret",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, block_q: int = 128, block_k: int = 256,
+                    interpret: bool = True):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, weight, *, eps: float = 1e-6, interpret: bool = True):
+    return rmsnorm_pallas(x, weight, eps=eps, interpret=interpret)

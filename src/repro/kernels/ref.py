@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_agg_ref", "attention_ref", "rmsnorm_ref"]
+
+
+def segment_agg_ref(
+    x: jnp.ndarray,           # (N, D) node features
+    edge_src: jnp.ndarray,    # (E,)
+    edge_dst: jnp.ndarray,    # (E,)
+    num_nodes: int,
+    mean: bool = True,
+) -> jnp.ndarray:
+    """out[v] = sum/mean of x[u] over in-edges (u, v)."""
+    s = jax.ops.segment_sum(x[edge_src], edge_dst, num_segments=num_nodes)
+    if not mean:
+        return s.astype(x.dtype)
+    deg = jax.ops.segment_sum(
+        jnp.ones_like(edge_dst, dtype=jnp.float32), edge_dst, num_segments=num_nodes
+    )
+    return (s.astype(jnp.float32) / jnp.maximum(deg, 1.0)[:, None]).astype(x.dtype)
+
+
+def attention_ref(
+    q: jnp.ndarray,           # (B, Hq, Sq, Dh)
+    k: jnp.ndarray,           # (B, Hkv, Sk, Dh)
+    v: jnp.ndarray,           # (B, Hkv, Sk, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,   # sliding window over keys (None = full)
+    q_offset: int = 0,           # absolute position of q[0] (decode: cache len)
+) -> jnp.ndarray:
+    """Dense-softmax GQA attention oracle (fp32 softmax)."""
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # fully-masked rows -> 0
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale * weight.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused RMSNorm (bandwidth-bound fusion example).
+
+One pass over the row: mean-of-squares reduction and the scale multiply are
+fused so each activation row is read from HBM exactly once, instead of
+XLA's unfused reduce + broadcast-mul pair.  Rows tile the grid; the full
+feature dim sits in VMEM per tile (d_model ≤ 8192 → ≤ 4 MiB for BR=128 fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_pallas"]
+
+DEFAULT_BR = 256
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    o_ref[...] = (x * scale * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(
+    x: jnp.ndarray,          # (..., D)
+    weight: jnp.ndarray,     # (D,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = DEFAULT_BR,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = int(x.size // d)
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    rows_pad = ((rows + br - 1) // br) * br
+    if rows_pad != rows:
+        x2 = jnp.pad(x2, ((0, rows_pad - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows_pad // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda r: (r, 0)),
+            pl.BlockSpec((1, d), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, d), x.dtype),
+        interpret=interpret,
+    )(x2, weight.reshape(1, d))
+    return out[:rows].reshape(orig_shape)

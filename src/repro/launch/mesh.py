@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "data_axes_of", "model_axis_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def model_axis_of(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

@@ -1,0 +1,263 @@
+"""Step builders + sharding assignment for the dry-run and real launches.
+
+Given (config, input shape, mesh) this module produces the jit-able step
+function with fully-specified in/out shardings:
+
+  train_4k     -> train_step  (phase-0 generalize; phase-1 also buildable)
+  prefill_32k  -> prefill_step
+  decode_32k   -> serve_step  (one token, cache of seq_len)
+  long_500k    -> serve_step  (sub-quadratic path per DESIGN.md policy)
+
+All PartitionSpecs are *sanitized* against the mesh: an axis is only applied
+to a dim it divides evenly (e.g. whisper's vocab 51865 stays replicated;
+qwen2's 14 heads skip the head constraint while its packed 896-wide
+projections still shard).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import InputShape, decode_cache_width, input_specs
+from ..core.gp.trainer import broadcast_to_partitions
+from ..models.config import ModelConfig
+from ..models.sharding import ShardingPolicy
+from ..models.transformer import Transformer
+from ..train.optim import AdamW, apply_updates
+from .mesh import data_axes_of, model_axis_of
+
+__all__ = ["BuiltStep", "build_step", "sanitize_spec"]
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Drop mesh axes from dims they do not divide evenly."""
+    parts: list = []
+    for d in range(len(shape)):
+        entry = spec[d] if d < len(spec) else None
+        if entry is None:
+            parts.append(None)
+            continue
+        axes = list(entry) if isinstance(entry, tuple) else [entry]
+        while axes:
+            size = math.prod(mesh.shape[a] for a in axes)
+            if shape[d] % size == 0:
+                break
+            axes.pop()
+        parts.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*parts)
+
+
+def _tree_shardings(specs, structs, mesh):
+    return jax.tree.map(
+        lambda spec, st: NamedSharding(mesh, sanitize_spec(spec, st.shape, mesh)),
+        specs, structs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _batch_specs(batch_struct: dict, dax: tuple[str, ...]) -> dict:
+    out = {}
+    for k, v in batch_struct.items():
+        out[k] = P(dax, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def _cache_spec_for(path: str, shape: tuple[int, ...], dax, mesh) -> P:
+    """(R, B, H, W, Dh) KV / (R, B, H, N, P) ssm / (R, B, K, C) conv."""
+    nd = len(shape)
+    if path.endswith("k") or path.endswith("v"):
+        cand = P(None, dax, "model", None, None)
+        s = sanitize_spec(cand, shape, mesh)
+        if s[2] is None and shape[3] % mesh.shape["model"] == 0:
+            # heads not shardable -> context-parallel cache (shard sequence)
+            s = sanitize_spec(P(None, dax, None, "model", None), shape, mesh)
+        return s
+    if path.endswith("ssm"):
+        return sanitize_spec(P(None, dax, "model", None, None), shape, mesh)
+    if path.endswith("conv"):
+        return sanitize_spec(P(None, dax, None, "model"), shape, mesh)
+    return P(*([None] * nd))
+
+
+@dataclass
+class BuiltStep:
+    name: str
+    step: Callable
+    in_shardings: Any
+    out_shardings: Any
+    arg_structs: tuple
+    model: Transformer
+    policy: ShardingPolicy
+
+    def jitted(self):
+        return jax.jit(self.step, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings)
+
+    def lower(self):
+        return self.jitted().lower(*self.arg_structs)
+
+
+def _make_policy(mesh, cfg: ModelConfig, *, seq_shard_residual: bool = True,
+                 constrain_attn: bool = True) -> ShardingPolicy:
+    return ShardingPolicy(
+        data_axes=data_axes_of(mesh),
+        model_axis=model_axis_of(mesh),
+        seq_shard_residual=seq_shard_residual,
+        constrain_attn=constrain_attn,
+        enabled=True,
+        axis_sizes={a: int(mesh.shape[a]) for a in mesh.axis_names},
+    )
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+               optimizer: AdamW | None = None,
+               phase: str = "generalize",
+               num_partitions: int | None = None,
+               seq_shard_residual: bool = True,
+               constrain_attn: bool = True) -> BuiltStep:
+    dax = data_axes_of(mesh)
+    policy = _make_policy(mesh, cfg, seq_shard_residual=seq_shard_residual,
+                          constrain_attn=constrain_attn)
+    model = Transformer(cfg, policy)
+    optimizer = optimizer or AdamW(lr=1e-3, weight_decay=0.01, grad_clip=1.0)
+
+    params_struct = jax.eval_shape(lambda: model.init(0))
+    p_specs = policy.param_specs(params_struct)
+    p_shard = _tree_shardings(p_specs, params_struct, mesh)
+
+    if shape.kind == "train" and phase == "generalize":
+        opt_struct = jax.eval_shape(optimizer.init, params_struct)
+        # moment tensors mirror the parameter sharding
+        o_shard = type(opt_struct)(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree.map(lambda s: s, p_shard),
+            nu=jax.tree.map(lambda s: s, p_shard),
+        )
+        batch_struct = input_specs(cfg, shape)
+        b_specs = _batch_specs(batch_struct, dax)
+        b_shard = _tree_shardings(b_specs, batch_struct, mesh)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return BuiltStep(
+            name=f"train:{cfg.name}:{shape.name}",
+            step=train_step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, NamedSharding(mesh, P())),
+            arg_structs=(params_struct, opt_struct, batch_struct),
+            model=model, policy=policy,
+        )
+
+    if shape.kind == "train" and phase == "personalize":
+        # per-partition replicas: leading axis sharded over the data axes
+        npart = num_partitions or math.prod(mesh.shape[a] for a in dax)
+        pp_struct = jax.eval_shape(
+            lambda: broadcast_to_partitions(model.init(0), npart))
+        pp_specs = jax.tree.map(
+            lambda s: P(dax, *s), policy.param_specs(params_struct),
+            is_leaf=lambda x: isinstance(x, P))
+        pp_shard = _tree_shardings(pp_specs, pp_struct, mesh)
+        opt_struct = jax.eval_shape(jax.vmap(optimizer.init), pp_struct)
+        oo_shard = type(opt_struct)(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree.map(lambda s: s, pp_shard),
+            nu=jax.tree.map(lambda s: s, pp_shard),
+        )
+        b_local = shape.global_batch // npart
+        batch_struct = input_specs(cfg, shape)
+        batch_struct = jax.tree.map(
+            lambda st: jax.ShapeDtypeStruct((npart, b_local) + st.shape[1:], st.dtype),
+            batch_struct)
+        bb_specs = {k: P(dax, *([None] * (len(v.shape) - 1)))
+                    for k, v in batch_struct.items()}
+        bb_shard = _tree_shardings(bb_specs, batch_struct, mesh)
+        active_struct = jax.ShapeDtypeStruct((npart,), jnp.bool_)
+        a_shard = NamedSharding(mesh, sanitize_spec(P(dax), active_struct.shape, mesh))
+
+        from ..core.gp.trainer import GPHyperParams, make_personalize_step
+        inner = make_personalize_step(model.train_loss, optimizer, GPHyperParams())
+
+        def personalize_step(params_p, opt_p, batch_p, global_params, active):
+            return inner(params_p, opt_p, batch_p, global_params, active)
+
+        return BuiltStep(
+            name=f"train-personalize:{cfg.name}:{shape.name}",
+            step=personalize_step,
+            in_shardings=(pp_shard, oo_shard, bb_shard, p_shard, a_shard),
+            out_shardings=(pp_shard, oo_shard,
+                           NamedSharding(mesh, sanitize_spec(P(dax), (npart,), mesh))),
+            arg_structs=(pp_struct, opt_struct, batch_struct, params_struct,
+                         active_struct),
+            model=model, policy=policy,
+        )
+
+    if shape.kind == "prefill":
+        batch_struct = input_specs(cfg, shape)
+        b_specs = _batch_specs(batch_struct, dax)
+        b_shard = _tree_shardings(b_specs, batch_struct, mesh)
+        width, rolling = decode_cache_width(cfg, shape)
+
+        def prefill_step(params, batch):
+            logits, caches, cache_len = model.prefill(
+                params, batch, cache_size=None)
+            return logits, caches, cache_len
+
+        # out shardings: infer cache specs from the eval_shape of the step
+        out_struct = jax.eval_shape(prefill_step, params_struct, batch_struct)
+        logits_sh = NamedSharding(
+            mesh, sanitize_spec(P(dax, "model"), out_struct[0].shape, mesh))
+        cache_sh = _cache_tree_shardings(out_struct[1], dax, mesh)
+        return BuiltStep(
+            name=f"prefill:{cfg.name}:{shape.name}",
+            step=prefill_step,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_sh, cache_sh, NamedSharding(mesh, P())),
+            arg_structs=(params_struct, batch_struct),
+            model=model, policy=policy,
+        )
+
+    # decode / serve step
+    spec = input_specs(cfg, shape)
+    token_struct, caches_struct = spec["token"], spec["caches"]
+    clen_struct, rolling = spec["cache_len"], spec["rolling"]
+    t_shard = NamedSharding(mesh, sanitize_spec(P(dax, None), token_struct.shape, mesh))
+    c_shard = _cache_tree_shardings(caches_struct, dax, mesh)
+    l_shard = NamedSharding(mesh, P())
+
+    def serve_step(params, token, caches, cache_len):
+        logits, new_caches = model.decode_step(params, token, caches, cache_len,
+                                               rolling=rolling)
+        return logits, new_caches
+
+    out_struct = jax.eval_shape(serve_step, params_struct, token_struct,
+                                caches_struct, clen_struct)
+    logits_sh = NamedSharding(
+        mesh, sanitize_spec(P(dax, "model"), out_struct[0].shape, mesh))
+    return BuiltStep(
+        name=f"serve:{cfg.name}:{shape.name}",
+        step=serve_step,
+        in_shardings=(p_shard, t_shard, c_shard, l_shard),
+        out_shardings=(logits_sh, c_shard),
+        arg_structs=(params_struct, token_struct, caches_struct, clen_struct),
+        model=model, policy=policy,
+    )
+
+
+def _cache_tree_shardings(caches_struct, dax, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_struct)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(NamedSharding(mesh, _cache_spec_for(name, leaf.shape, dax, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)

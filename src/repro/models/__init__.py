@@ -1,0 +1,6 @@
+from .config import ModelConfig, SubLayer
+from .sharding import NO_SHARDING, ShardingPolicy
+from .transformer import Transformer, chunked_ce_loss
+
+__all__ = ["ModelConfig", "SubLayer", "ShardingPolicy", "NO_SHARDING",
+           "Transformer", "chunked_ce_loss"]

@@ -1,0 +1,136 @@
+"""Sharding policy: how the model zoo maps onto the production mesh.
+
+Baseline scheme (recorded as such in EXPERIMENTS.md §Perf):
+  · params: Megatron 2D — heads / ffn-hidden / experts / vocab over "model";
+    everything batch-like over ("pod","data").
+  · residual stream (B, S, d): batch over data axes, **sequence over
+    "model"** between blocks (Megatron sequence parallelism) so the saved
+    scan carry under remat is 1/|model| per chip — without it the 80–94
+    layer archs cannot fit activations in 16 GB HBM.
+  · attention/mlp internals: heads (resp. ffn hidden) over "model",
+    sequence gathered. GSPMD inserts the all-gather / reduce-scatter pair.
+
+`spec_for_param` assigns PartitionSpecs by parameter name + shape rules, so
+every architecture in the zoo shares one sharding rulebook.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "NO_SHARDING"]
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str | None = "model"
+    seq_shard_residual: bool = True
+    constrain_attn: bool = True   # head-shard constraint on attention acts
+    enabled: bool = True
+    # mesh axis sizes: required for divisibility-aware activation constraints
+    axis_sizes: Any = None   # dict[str, int] | None
+
+    # ---- activation specs -------------------------------------------------
+    def residual_spec(self) -> P:
+        if self.seq_shard_residual and self.model_axis:
+            return P(self.data_axes, self.model_axis, None)
+        return P(self.data_axes, None, None)
+
+    def attn_act_spec(self) -> P:
+        # (B, H, S, Dh): heads over model
+        return P(self.data_axes, self.model_axis, None, None)
+
+    def batch_spec(self, ndim: int) -> P:
+        return P(self.data_axes, *([None] * (ndim - 1)))
+
+    def _sanitize(self, spec: P, shape: tuple[int, ...]) -> P:
+        if self.axis_sizes is None:
+            return spec
+        parts = []
+        for d in range(len(shape)):
+            entry = spec[d] if d < len(spec) else None
+            if entry is None:
+                parts.append(None)
+                continue
+            axes = list(entry) if isinstance(entry, tuple) else [entry]
+            while axes:
+                total = 1
+                for a in axes:
+                    total *= self.axis_sizes[a]
+                if shape[d] % total == 0:
+                    break
+                axes.pop()
+            parts.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+        return P(*parts)
+
+    def constrain(self, x, spec: P):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, self._sanitize(spec, x.shape))
+
+    def residual(self, x):
+        return self.constrain(x, self.residual_spec())
+
+    # ---- parameter specs ---------------------------------------------------
+    def spec_for_param(self, name: str, shape: tuple[int, ...]) -> P:
+        """Name/shape rule-based parameter sharding.
+
+        Leading stacked-layer axes (from scan) are never sharded; rules match
+        on the trailing dims.  ``name`` is the flattened pytree path.
+        """
+        m = self.model_axis
+        if not self.enabled or m is None:
+            return P()
+        n = name.lower()
+        nd = len(shape)
+
+        def last2(a, b):  # spec with trailing two dims (a, b), rest None
+            return P(*([None] * (nd - 2)), a, b)
+
+        def last1(a):
+            return P(*([None] * (nd - 1)), a)
+
+        if nd == 0:
+            return P()
+        if "embed" in n and nd >= 2:          # (V, d) token embedding
+            return last2(m, None)
+        if "lm_head" in n and nd >= 2:        # (d, V)
+            return last2(None, m)
+        if any(k in n for k in ("wq", "wk", "wv")) and nd >= 2:
+            return last2(None, m)             # (d, H*Dh) -> heads sharded
+        if "wo" in n and nd >= 2:
+            return last2(m, None)             # (H*Dh, d)
+        if any(k in n for k in ("w_gate", "w_up", "w_in")) and nd >= 2:
+            return last2(None, m)             # (d, ff)
+        if any(k in n for k in ("w_down", "w_out")) and nd >= 2:
+            return last2(m, None)             # (ff, d)
+        if "expert" in n and nd >= 3:
+            # stacked experts (..., E, d, ff)/(..., E, ff, d): expert-parallel
+            return P(*([None] * (nd - 3)), m, None, None)
+        if "router" in n and nd >= 2:
+            return P()                        # tiny, replicate
+        if any(k in n for k in ("b_q", "b_k", "b_v")) and nd >= 1:
+            return last1(m)
+        if "in_proj" in n and nd >= 2:        # mamba2 (d, 2*di+2*G*N+H)
+            return last2(None, m)
+        if "out_proj" in n and nd >= 2:       # mamba2 (di, d)
+            return last2(m, None)
+        if any(k in n for k in ("conv", "a_log", "dt_bias", "d_skip", "ssm_norm")):
+            # small per-channel params along d_inner -> model-sharded last dim
+            return last1(m) if shape[-1] % 2 == 0 else P()
+        return P()  # norms, biases, scalars: replicated
+
+    def param_specs(self, params: Any) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        specs = []
+        for path, leaf in flat:
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            specs.append(self.spec_for_param(name, leaf.shape))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+NO_SHARDING = ShardingPolicy(enabled=False, model_axis=None, data_axes=())

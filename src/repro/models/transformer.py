@@ -1,0 +1,366 @@
+"""Architecture assembly: super-block scan, caches, train/prefill/decode.
+
+One `Transformer` class covers all ten assigned architectures:
+  · layers are grouped into repeated super-blocks whose parameters are
+    STACKED along a leading repeat axis and driven by `lax.scan` — 94-layer
+    models lower to a single block HLO (compile-time sanity);
+  · optional activation checkpointing (`jax.checkpoint`) around the scan body;
+  · decode carries a per-sublayer cache pytree with the same stacked layout;
+  · encoder–decoder (whisper) and prefix-LM (paligemma) wrap the same core.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ModelConfig, SubLayer
+from .sharding import NO_SHARDING, ShardingPolicy
+
+__all__ = ["Transformer", "chunked_ce_loss"]
+
+Params = dict[str, Any]
+
+
+def chunked_ce_loss(h: jnp.ndarray, w_head: jnp.ndarray, labels: jnp.ndarray,
+                    chunk: int = 4096, unroll: bool = False) -> jnp.ndarray:
+    """Cross-entropy over vocab without materialising (T, V) logits.
+
+    Scans over token chunks; each chunk's logits (chunk, V) live only inside
+    one scan iteration (V can be 257k — the full logits would be GBs), and
+    the body is REMATTED so the backward pass recomputes each chunk's logits
+    instead of stashing them (without this the saved logp of every chunk
+    costs ~40 GB/chip at train_4k).  Labels < 0 are masked out.
+    """
+    t, d = h.shape
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+    hc = h.reshape(-1, chunk, d)
+    lc = labels.reshape(-1, chunk)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        hx, lx = inp
+        logits = hx.astype(jnp.float32) @ w_head.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        safe = jnp.maximum(lx, 0)
+        nll = -jnp.take_along_axis(logp, safe[:, None], axis=1)[:, 0]
+        wgt = (lx >= 0).astype(jnp.float32)
+        return (carry[0] + (nll * wgt).sum(), carry[1] + wgt.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hc, lc),
+                                 unroll=hc.shape[0] if unroll else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+@dataclass(frozen=True)
+class Transformer:
+    cfg: ModelConfig
+    policy: ShardingPolicy = NO_SHARDING
+
+    # ================================================================ init
+    def init(self, seed: int = 0) -> Params:
+        cfg = self.cfg
+        rng = L.KeyGen(seed)
+        dt = jnp.dtype(cfg.dtype)
+        d = cfg.d_model
+        p: Params = {
+            "embed": (0.02 * jax.random.normal(rng(), (cfg.vocab_size, d), jnp.float32)).astype(dt),
+            "final_norm": L.norm_init(cfg),
+            "blocks": self._init_blocks(rng),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = L._dense_init(rng, d, cfg.vocab_size, dt)
+        if cfg.is_encoder_decoder:
+            p["encoder"] = {
+                "blocks": self._init_enc_blocks(rng),
+                "final_norm": L.norm_init(cfg),
+            }
+        return p
+
+    def _sublayer_init(self, sl: SubLayer, rng) -> Params:
+        cfg = self.cfg
+        sp: Params = {"norm_mix": L.norm_init(cfg)}
+        if sl.mixer == "attention":
+            sp["attn"] = L.attention_init(cfg, rng)
+        else:
+            sp["mamba"] = L.mamba2_init(cfg, rng)
+        if sl.cross_attention:
+            sp["norm_cross"] = L.norm_init(cfg)
+            sp["cross"] = L.attention_init(cfg, rng, cross=True)
+        if sl.ffn == "mlp":
+            sp["norm_ffn"] = L.norm_init(cfg)
+            sp["mlp"] = L.mlp_init(cfg, rng)
+        elif sl.ffn == "moe":
+            sp["norm_ffn"] = L.norm_init(cfg)
+            sp["moe"] = L.moe_init(cfg, rng)
+        return sp
+
+    def _init_blocks(self, rng) -> Params:
+        cfg = self.cfg
+        per_repeat = []
+        for _ in range(cfg.num_repeats):
+            per_repeat.append({
+                f"sub{i}": self._sublayer_init(sl, rng)
+                for i, sl in enumerate(cfg.super_block)
+            })
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_repeat)
+
+    def _init_enc_blocks(self, rng) -> Params:
+        cfg = self.cfg
+        sl = SubLayer(mixer="attention", ffn="mlp")
+        reps = [
+            {"sub0": self._sublayer_init(sl, rng)} for _ in range(cfg.encoder_layers)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+    # ======================================================== block bodies
+    def _run_sublayer(self, i: int, sl: SubLayer, sp: Params, x, *, mode: str,
+                      cache=None, cache_len=None, enc_out=None, window=None,
+                      rolling=False, prefix_len=0, cache_size=None):
+        """Returns (x, new_cache, aux)."""
+        cfg, policy = self.cfg, self.policy
+        aux = jnp.zeros((), jnp.float32)
+        new_cache: Params = {}
+        h = L.norm_apply(sp["norm_mix"], x, cfg)
+        if sl.mixer == "attention":
+            if mode == "train":
+                mix = L.attention_apply(sp["attn"], h, cfg, policy, causal=True,
+                                        window=window, prefix_len=prefix_len)
+                new_cache["attn"] = None
+            elif mode == "prefill":
+                mix, c = L.attention_prefill(sp["attn"], h, cfg, policy,
+                                             window=window, prefix_len=prefix_len,
+                                             cache_size=cache_size)
+                new_cache["attn"] = c
+            else:  # decode
+                mix, c = L.attention_decode(sp["attn"], h, cache["attn"], cache_len,
+                                            cfg, policy, window=window, rolling=rolling)
+                new_cache["attn"] = c
+        else:  # mamba2
+            if mode in ("train", "prefill"):
+                mix, c = L.mamba2_apply(sp["mamba"], h, cfg, policy)
+                new_cache["mamba"] = c if mode == "prefill" else None
+            else:
+                mix, c = L.mamba2_decode(sp["mamba"], h, cache["mamba"], cfg)
+                new_cache["mamba"] = c
+        x = x + mix
+        x = policy.residual(x) if policy.enabled else x
+
+        if sl.cross_attention:
+            h = L.norm_apply(sp["norm_cross"], x, cfg)
+            if mode == "decode":
+                cx, _ = L.attention_decode(sp["cross"], h, None, cache_len, cfg,
+                                           policy, enc_cache=cache["cross"])
+                new_cache["cross"] = cache["cross"]
+            else:
+                cx = L.attention_apply(sp["cross"], h, cfg, policy, causal=False,
+                                       enc_out=enc_out)
+                if mode == "prefill":
+                    # stash encoder K/V for decode
+                    kq = enc_out @ sp["cross"]["wk"] + sp["cross"].get("b_k", 0.0)
+                    vq = enc_out @ sp["cross"]["wv"] + sp["cross"].get("b_v", 0.0)
+                    b, se, _ = enc_out.shape
+                    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+                    new_cache["cross"] = {
+                        "k": kq.reshape(b, se, hkv, dh).transpose(0, 2, 1, 3),
+                        "v": vq.reshape(b, se, hkv, dh).transpose(0, 2, 1, 3),
+                    }
+            x = x + cx
+            x = policy.residual(x) if policy.enabled else x
+
+        if sl.ffn != "none":
+            h = L.norm_apply(sp["norm_ffn"], x, cfg)
+            if sl.ffn == "moe":
+                y, aux = L.moe_apply(sp["moe"], h, cfg, self.policy)
+            else:
+                y = L.mlp_apply(sp["mlp"], h, cfg)
+            x = x + y
+            x = policy.residual(x) if policy.enabled else x
+        return x, new_cache, aux
+
+    def _scan_blocks(self, blocks: Params, x, *, mode: str, caches=None,
+                     cache_len=None, enc_out=None, rolling=False,
+                     prefix_len=0, cache_size=None):
+        cfg = self.cfg
+        window = cfg.sliding_window
+
+        def body(carry, xs):
+            xc = carry
+            blk_params = xs[0]
+            blk_cache = xs[1] if caches is not None else None
+            new_caches = {}
+            aux_total = jnp.zeros((), jnp.float32)
+            for i, sl in enumerate(cfg.super_block):
+                sub_cache = None if blk_cache is None else blk_cache.get(f"sub{i}")
+                xc, nc, aux = self._run_sublayer(
+                    i, sl, blk_params[f"sub{i}"], xc, mode=mode, cache=sub_cache,
+                    cache_len=cache_len, enc_out=enc_out, window=window,
+                    rolling=rolling, prefix_len=prefix_len, cache_size=cache_size)
+                new_caches[f"sub{i}"] = nc
+                aux_total = aux_total + aux
+            return xc, (new_caches, aux_total)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        xs = (blocks,) if caches is None else (blocks, caches)
+        x, (new_caches, auxes) = jax.lax.scan(
+            body, x, xs, unroll=cfg.num_repeats if cfg.scan_unroll else 1)
+        return x, new_caches, auxes.sum()
+
+    # ============================================================= encoder
+    def encode(self, params: Params, enc_embeds: jnp.ndarray) -> jnp.ndarray:
+        """Whisper encoder over precomputed (stub) frame embeddings."""
+        cfg = self.cfg
+        se = enc_embeds.shape[1]
+        x = enc_embeds + L.sinusoidal_positions(se, cfg.d_model)[None].astype(enc_embeds.dtype)
+
+        def body(carry, blk):
+            h = L.norm_apply(blk["sub0"]["norm_mix"], carry, cfg)
+            mix = L.attention_apply(blk["sub0"]["attn"], h, cfg, self.policy,
+                                    causal=False)
+            xc = carry + mix
+            h = L.norm_apply(blk["sub0"]["norm_ffn"], xc, cfg)
+            xc = xc + L.mlp_apply(blk["sub0"]["mlp"], h, cfg)
+            return xc, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"],
+                            unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+        return L.norm_apply(params["encoder"]["final_norm"], x, cfg)
+
+    # ============================================================== embed
+    def _embed_tokens(self, params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+        x = params["embed"][tokens]
+        if self.cfg.rope_theta is None and not self.cfg.is_encoder_decoder:
+            x = x + L.sinusoidal_positions(tokens.shape[1], self.cfg.d_model)[None].astype(x.dtype)
+        return x
+
+    def _head(self, params: Params) -> jnp.ndarray:
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    # ================================================================ train
+    def train_loss(self, params: Params, batch: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """batch: tokens (B,S), labels (B,S); optional patch_embeds /
+        enc_embeds for vlm / audio.  Returns scalar loss."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        prefix_len = 0
+        if cfg.prefix_tokens:
+            x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+            prefix_len = cfg.prefix_tokens
+        if cfg.is_encoder_decoder:
+            x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+            enc_out = self.encode(params, batch["enc_embeds"])
+        else:
+            enc_out = None
+        x = self.policy.residual(x) if self.policy.enabled else x
+        x, _, aux = self._scan_blocks(params["blocks"], x, mode="train",
+                                      enc_out=enc_out, prefix_len=prefix_len)
+        x = L.norm_apply(params["final_norm"], x, cfg)
+
+        labels = batch["labels"]
+        if cfg.prefix_tokens:  # no loss on image prefix
+            pads = jnp.full((labels.shape[0], cfg.prefix_tokens), -1, labels.dtype)
+            labels = jnp.concatenate([pads, labels], axis=1)
+        b, s, d = x.shape
+        # measurement mode: one full-size chunk => the scan has a single
+        # iteration, so cost_analysis counts the CE exactly with a tiny HLO
+        chunk = b * s if cfg.scan_unroll else 4096
+        loss = chunked_ce_loss(x.reshape(b * s, d), self._head(params),
+                               labels.reshape(-1), chunk=chunk)
+        return loss + aux
+
+    # ============================================================== prefill
+    def init_cache_len(self) -> jnp.ndarray:
+        return jnp.zeros((), jnp.int32)
+
+    def prefill(self, params: Params, batch: dict[str, jnp.ndarray], *,
+                cache_size: int | None = None):
+        """Run the full prompt; returns (last_logits, caches, cache_len)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        prefix_len = 0
+        if cfg.prefix_tokens:
+            x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+            prefix_len = cfg.prefix_tokens
+        if cfg.is_encoder_decoder:
+            x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+            enc_out = self.encode(params, batch["enc_embeds"])
+        else:
+            enc_out = None
+        x, caches, _ = self._scan_blocks(
+            params["blocks"], x, mode="prefill", enc_out=enc_out,
+            prefix_len=prefix_len, cache_size=cache_size)
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = x[:, -1].astype(jnp.float32) @ self._head(params).astype(jnp.float32)
+        cache_len = jnp.asarray(x.shape[1], jnp.int32)
+        return logits, caches, cache_len
+
+    # =============================================================== decode
+    def decode_step(self, params: Params, token: jnp.ndarray, caches, cache_len,
+                    *, rolling: bool = False, extra: dict | None = None):
+        """One-token step.  token: (B, 1) int32.  Returns (logits, caches)."""
+        cfg = self.cfg
+        x = params["embed"][token]
+        if cfg.rope_theta is None:
+            # sinusoidal absolute position for the current index
+            half = cfg.d_model // 2
+            i = jnp.arange(half, dtype=jnp.float32)
+            ang = cache_len.astype(jnp.float32) / jnp.power(10000.0, 2 * i / cfg.d_model)
+            pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+            x = x + pos[None, None].astype(x.dtype)
+        x, new_caches, _ = self._scan_blocks(
+            params["blocks"], x, mode="decode", caches=caches,
+            cache_len=cache_len, rolling=rolling)
+        x = L.norm_apply(params["final_norm"], x, cfg)
+        logits = x[:, -1].astype(jnp.float32) @ self._head(params).astype(jnp.float32)
+        return logits, new_caches
+
+    # ======================================================== cache structs
+    def make_decode_cache(self, batch: int, cache_width: int,
+                          enc_seq: int | None = None) -> Any:
+        """Zero-initialised cache pytree matching _scan_blocks layout."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+
+        def one_sub(sl: SubLayer) -> Params:
+            c: Params = {}
+            if sl.mixer == "attention":
+                c["attn"] = {
+                    "k": jnp.zeros((cfg.num_repeats, batch, hkv, cache_width, dh), dt),
+                    "v": jnp.zeros((cfg.num_repeats, batch, hkv, cache_width, dh), dt),
+                }
+            else:
+                conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+                c["mamba"] = {
+                    "conv": jnp.zeros((cfg.num_repeats, batch, cfg.ssm_conv - 1, conv_dim), dt),
+                    "ssm": jnp.zeros((cfg.num_repeats, batch, cfg.ssm_heads,
+                                      cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+                }
+            if sl.cross_attention:
+                se = enc_seq or cfg.encoder_seq
+                c["cross"] = {
+                    "k": jnp.zeros((cfg.num_repeats, batch, hkv, se, dh), dt),
+                    "v": jnp.zeros((cfg.num_repeats, batch, hkv, se, dh), dt),
+                }
+            return c
+
+        return {f"sub{i}": one_sub(sl) for i, sl in enumerate(cfg.super_block)}
+
+    # ============================================================== params N
+    def param_count(self, params: Params) -> int:
+        return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,156 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips × HBM_bw)
+    collective term = coll_bytes  / (chips × link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes-accessed; collective bytes are
+parsed from the (post-SPMD-partitioning) HLO text by summing the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  HLO text is per-PARTITION (shapes are already local),
+so the parsed bytes are per-chip — matching the per-chip roofline
+denominators directly.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["HW", "collective_bytes_from_hlo", "analyze_compiled",
+           "RooflineReport", "model_flops"]
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-class chip constants (per the assignment)."""
+
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\)|\S+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|collective-permute-start)\(",
+    re.MULTILINE,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum OUTPUT shape bytes per collective kind (post-partitioning HLO:
+    shapes are per-device)."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def model_flops(n_active_params: float, tokens: float) -> float:
+    """The 6·N·D estimate (N = active params, D = tokens)."""
+    return 6.0 * n_active_params * tokens
+
+
+@dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    hlo_flops: float                 # per-chip FLOPs (cost_analysis is per-device)
+    hlo_bytes: float                 # per-chip bytes accessed
+    coll_bytes: dict[str, int] = field(default_factory=dict)
+    model_flops_total: float = 0.0   # 6·N·D over the GLOBAL batch
+    peak_memory_per_chip: float = 0.0
+    hw: HW = field(default_factory=HW)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / self.hw.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / self.hw.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return sum(self.coll_bytes.values()) / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): fraction of compiled compute
+        that is 'useful' model compute (catches remat/dispatch waste)."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    def row(self) -> dict:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "coll_bytes_per_chip": sum(self.coll_bytes.values()),
+            "coll_breakdown": self.coll_bytes,
+            "model_flops": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "peak_memory_per_chip_gb": self.peak_memory_per_chip / 1e9,
+        }
+
+
+def analyze_compiled(name: str, lowered, compiled, *, chips: int,
+                     n_active_params: float, tokens: float,
+                     hw: HW = HW()) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo_text = compiled.as_text()
+    except Exception:
+        hlo_text = lowered.as_text()
+    coll = collective_bytes_from_hlo(hlo_text)
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        peak = (getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0))
+    return RooflineReport(
+        name=name, chips=chips, hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes=coll, model_flops_total=model_flops(n_active_params, tokens),
+        peak_memory_per_chip=peak, hw=hw,
+    )

@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+The jitted steps are exactly the ones the dry-run lowers for the decode
+shapes (`decode_32k`, `long_500k`); here they run at small scale on CPU for
+the examples and integration tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import Transformer
+
+__all__ = ["ServeEngine"]
+
+
+@dataclass
+class ServeEngine:
+    model: Transformer
+    params: Any
+    cache_size: int
+    rolling: bool = False
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, cache_size=self.cache_size))
+        self._decode = jax.jit(
+            partial(self.model.decode_step, rolling=self.rolling))
+
+    def generate(
+        self,
+        batch: dict[str, np.ndarray],
+        max_new_tokens: int,
+        *,
+        temperature: float = 0.0,
+        seed: int = 0,
+        eos_id: int | None = None,
+    ) -> np.ndarray:
+        """batch: {"tokens": (B, S)[, "patch_embeds"/"enc_embeds"]} ->
+        (B, max_new_tokens) generated ids (greedy if temperature == 0)."""
+        key = jax.random.key(seed)
+        logits, caches, cache_len = self._prefill(self.params, batch)
+        b = logits.shape[0]
+        out = np.zeros((b, max_new_tokens), dtype=np.int32)
+        done = np.zeros(b, dtype=bool)
+        tok = None
+        for t in range(max_new_tokens):
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            tok = tok.astype(jnp.int32)[:, None]
+            out[:, t] = np.asarray(tok[:, 0])
+            if eos_id is not None:
+                done |= out[:, t] == eos_id
+                if done.all():
+                    out = out[:, : t + 1]
+                    break
+            logits, caches = self._decode(self.params, tok, caches, cache_len)
+            cache_len = cache_len + 1
+        return out

@@ -1,0 +1,9 @@
+from .optim import AdamW, OptState, SGDM
+from .losses import cross_entropy_loss, focal_loss, prox_penalty
+from .metrics import f1_scores, F1Report
+
+__all__ = [
+    "AdamW", "SGDM", "OptState",
+    "cross_entropy_loss", "focal_loss", "prox_penalty",
+    "f1_scores", "F1Report",
+]

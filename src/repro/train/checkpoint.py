@@ -1,0 +1,79 @@
+"""Checkpointing: pytree <-> npz with path-keyed entries (+ best-model
+bookkeeping for the GP phases: one global W^G, one W^P per partition)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz cannot round-trip ml_dtypes; widen (load casts back)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_pytree(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    entries = _flatten(tree)
+    np.savez(path, **entries)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Best-model tracking for GP training.
+
+    Phase-0 keeps the best GLOBAL model (avg val micro-F1); phase-1 keeps the
+    best PERSONAL model per partition (its own val micro-F1) — 'the best
+    model is saved' per the paper, independently for each phase/host.
+    """
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def save_global(self, params: Any, epoch: int, score: float) -> None:
+        save_pytree(os.path.join(self.dir, "global_best.npz"), params,
+                    meta={"epoch": epoch, "score": score, "phase": 0})
+
+    def save_personal(self, partition: int, params: Any, epoch: int, score: float) -> None:
+        save_pytree(os.path.join(self.dir, f"personal_{partition}_best.npz"), params,
+                    meta={"epoch": epoch, "score": score, "phase": 1,
+                          "partition": partition})
+
+    def load_global(self, like: Any) -> Any:
+        return load_pytree(os.path.join(self.dir, "global_best.npz"), like)
+
+    def load_personal(self, partition: int, like: Any) -> Any:
+        return load_pytree(os.path.join(self.dir, f"personal_{partition}_best.npz"), like)

@@ -1,0 +1,86 @@
+"""F1 metrics exactly as the paper reports them.
+
+micro-F1    — global TP/FP/FN over all test examples (== accuracy for
+              single-label multi-class).
+macro-F1    — unweighted mean of per-class F1.
+weighted-F1 — per-class F1 averaged with class-frequency weights.
+
+Implemented in both NumPy (host evaluation) and jnp (on-device eval inside
+jitted loops); no sklearn offline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+try:  # jnp variant is optional at import time for host-only tooling
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = None
+
+__all__ = ["F1Report", "f1_scores", "f1_scores_jnp", "confusion_counts"]
+
+
+@dataclass(frozen=True)
+class F1Report:
+    micro: float
+    macro: float
+    weighted: float
+    per_class: np.ndarray
+    support: np.ndarray
+
+    def row(self) -> str:
+        return f"micro={self.micro*100:.2f} macro={self.macro*100:.2f} weighted={self.weighted*100:.2f}"
+
+
+def confusion_counts(
+    preds: np.ndarray, labels: np.ndarray, num_classes: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(tp, fp, fn) per class, ignoring labels < 0."""
+    valid = labels >= 0
+    preds, labels = preds[valid], labels[valid]
+    tp = np.zeros(num_classes)
+    fp = np.zeros(num_classes)
+    fn = np.zeros(num_classes)
+    hit = preds == labels
+    np.add.at(tp, labels[hit], 1.0)
+    np.add.at(fp, preds[~hit], 1.0)
+    np.add.at(fn, labels[~hit], 1.0)
+    return tp, fp, fn
+
+
+def f1_scores(preds: np.ndarray, labels: np.ndarray, num_classes: int) -> F1Report:
+    preds = np.asarray(preds)
+    labels = np.asarray(labels)
+    tp, fp, fn = confusion_counts(preds, labels, num_classes)
+    denom = 2 * tp + fp + fn
+    per_class = np.where(denom > 0, 2 * tp / np.maximum(denom, 1e-12), 0.0)
+    support = tp + fn
+    total = support.sum()
+    micro_den = 2 * tp.sum() + fp.sum() + fn.sum()
+    micro = float(2 * tp.sum() / micro_den) if micro_den > 0 else 0.0
+    present = support > 0
+    macro = float(per_class[present].mean()) if present.any() else 0.0
+    weighted = float((per_class * support).sum() / total) if total > 0 else 0.0
+    return F1Report(micro=micro, macro=macro, weighted=weighted,
+                    per_class=per_class, support=support)
+
+
+def f1_scores_jnp(preds, labels, num_classes: int):
+    """jnp micro/macro/weighted triple for on-device eval steps."""
+    valid = labels >= 0
+    safe_labels = jnp.maximum(labels, 0)
+    hit = (preds == labels) & valid
+    miss = (preds != labels) & valid
+    tp = jnp.zeros(num_classes).at[safe_labels].add(hit.astype(jnp.float32))
+    fn = jnp.zeros(num_classes).at[safe_labels].add(miss.astype(jnp.float32))
+    fp = jnp.zeros(num_classes).at[jnp.maximum(preds, 0)].add(miss.astype(jnp.float32))
+    denom = 2 * tp + fp + fn
+    per_class = jnp.where(denom > 0, 2 * tp / jnp.maximum(denom, 1e-12), 0.0)
+    support = tp + fn
+    micro = 2 * tp.sum() / jnp.maximum(2 * tp.sum() + fp.sum() + fn.sum(), 1e-12)
+    present = (support > 0).astype(jnp.float32)
+    macro = (per_class * present).sum() / jnp.maximum(present.sum(), 1.0)
+    weighted = (per_class * support).sum() / jnp.maximum(support.sum(), 1.0)
+    return micro, macro, weighted

@@ -1,0 +1,113 @@
+"""Minimal-yet-real optimizers as pure pytree transforms (optax is not
+available offline; these mirror its update contract so they could be swapped
+out 1:1).
+
+Every optimizer is a dataclass of hyper-parameters with
+
+    init(params)              -> OptState
+    update(grads, state, params) -> (updates, new_state)
+
+where ``updates`` are *deltas* to add to params.  All state is a pytree of
+arrays so the whole thing jits, shards (the personalized phase vmaps a
+leading partition axis straight through it) and checkpoints.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "AdamW", "SGDM", "clip_by_global_norm", "global_norm"]
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree      # first moment  (zeros pytree for SGDM's momentum)
+    nu: PyTree      # second moment (unused by SGDM)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    """AdamW with decoupled weight decay and linear-warmup-constant LR."""
+
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_steps: int = 0
+    grad_clip: float | None = None
+
+    def init(self, params: PyTree) -> OptState:
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def _lr_at(self, step: jnp.ndarray) -> jnp.ndarray:
+        if self.warmup_steps <= 0:
+            return jnp.asarray(self.lr, jnp.float32)
+        frac = jnp.minimum(1.0, (step + 1) / self.warmup_steps)
+        return jnp.asarray(self.lr, jnp.float32) * frac
+
+    def update(self, grads: PyTree, state: OptState, params: PyTree) -> tuple[PyTree, OptState]:
+        if self.grad_clip is not None:
+            grads = clip_by_global_norm(grads, self.grad_clip)
+        step = state.step + 1
+        lr = self._lr_at(state.step)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1.0 - b1**t)
+        nu_hat_scale = 1.0 / (1.0 - b2**t)
+
+        def upd(m, v, p):
+            u = -lr * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+            if self.weight_decay:
+                u = u - lr * self.weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+
+@dataclass(frozen=True)
+class SGDM:
+    """SGD with momentum — used for cheap ablation baselines."""
+
+    lr: float = 1e-2
+    momentum: float = 0.9
+    grad_clip: float | None = None
+
+    def init(self, params: PyTree) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+    def update(self, grads: PyTree, state: OptState, params: PyTree) -> tuple[PyTree, OptState]:
+        if self.grad_clip is not None:
+            grads = clip_by_global_norm(grads, self.grad_clip)
+        mu = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32), state.mu, grads
+        )
+        updates = jax.tree.map(lambda m, p: (-self.lr * m).astype(p.dtype), mu, params)
+        return updates, OptState(step=state.step + 1, mu=mu, nu=state.nu)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,29 @@
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+
+@pytest.fixture(scope="session")
+def homophilous_graph():
+    """Small homophilous graph with imbalanced labels + correlated features."""
+    rng = np.random.default_rng(7)
+    n, k = 500, 5
+    p = np.array([0.4, 0.25, 0.18, 0.12, 0.05])
+    labels = rng.choice(k, n, p=p)
+    rows, cols = [], []
+    for i in range(n):
+        for _ in range(6):
+            if rng.random() < 0.8:
+                cand = np.flatnonzero(labels == labels[i])
+                j = int(rng.choice(cand))
+            else:
+                j = int(rng.integers(0, n))
+            if j != i:
+                rows.append(i)
+                cols.append(j)
+    a = sp.csr_matrix((np.ones(len(rows)), (rows, cols)), shape=(n, n))
+    a = ((a + a.T) > 0).astype(np.float64).tocsr()
+    a.setdiag(0)
+    a.eliminate_zeros()
+    feats = (np.eye(k)[labels] + rng.normal(0, 0.3, (n, k))).astype(np.float32)
+    return a, feats, labels

@@ -1,0 +1,82 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (CorpusSpec, DomainCorpus, ShardedBatcher,
+                        shard_corpus_by_entropy)
+from repro.train.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return DomainCorpus(CorpusSpec(num_docs=300, doc_len=24, vocab_size=64,
+                                   num_domains=6, seed=3))
+
+
+def test_corpus_shapes(corpus):
+    assert corpus.tokens.shape == (300, 24)
+    assert corpus.tokens.max() < 64
+    assert corpus.features.shape == (300, 32)
+    assert set(np.unique(corpus.domains)) <= set(range(6))
+
+
+def test_corpus_domain_imbalance(corpus):
+    counts = np.bincount(corpus.domains, minlength=6)
+    assert counts.max() > 2 * max(1, counts.min())
+
+
+def test_entropy_sharding_beats_random(corpus):
+    ew = shard_corpus_by_entropy(corpus, 4, method="ew")
+    rnd = shard_corpus_by_entropy(corpus, 4, method="random")
+    assert ew.shard_entropies.mean() < rnd.shard_entropies.mean()
+    # every doc assigned
+    assert sorted(np.concatenate([ew.docs_of(p) for p in range(4)]).tolist()) \
+        == list(range(300))
+
+
+def test_sharded_batcher(corpus):
+    sh = shard_corpus_by_entropy(corpus, 4, method="ew")
+    b = ShardedBatcher(corpus, sh, batch_per_shard=8).next_batch()
+    assert b["tokens"].shape == (4, 8, 24)
+    assert b["labels"].shape == (4, 8, 24)
+    # labels are next-token-shifted with final -1
+    assert (b["labels"][:, :, -1] == -1).all()
+    np.testing.assert_array_equal(b["labels"][:, :, :-1], b["tokens"][:, :, 1:])
+
+
+# ------------------------------------------------------------- checkpoint --
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16)},
+            "stack": [jnp.zeros(2), jnp.full((1,), 7.0)]}
+    path = os.path.join(tmp_path, "ck.npz")
+    save_pytree(path, tree, meta={"epoch": 3})
+    back = load_pytree(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_manager_gp(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    params = {"w": jnp.ones((2, 2))}
+    mgr.save_global(params, epoch=5, score=0.81)
+    mgr.save_personal(2, jax.tree.map(lambda x: x * 3, params), epoch=9,
+                      score=0.9)
+    g = mgr.load_global(jax.tree.map(jnp.zeros_like, params))
+    p2 = mgr.load_personal(2, jax.tree.map(jnp.zeros_like, params))
+    assert float(g["w"][0, 0]) == 1.0
+    assert float(p2["w"][0, 0]) == 3.0
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "x.npz")
+    save_pytree(path, {"w": jnp.ones(3)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        load_pytree(path, {"w": jnp.zeros(4)})

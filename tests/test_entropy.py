@@ -1,0 +1,55 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entropy import label_entropy, partition_entropies, partition_stats
+
+
+def test_uniform_labels_max_entropy():
+    labels = np.repeat(np.arange(8), 100)
+    assert label_entropy(labels) == pytest.approx(np.log(8), abs=1e-9)
+
+
+def test_single_class_zero_entropy():
+    assert label_entropy(np.zeros(100, dtype=int)) == 0.0
+
+
+def test_unlabelled_ignored():
+    labels = np.array([0, 0, 1, 1, -1, -1, -1])
+    assert label_entropy(labels) == pytest.approx(np.log(2))
+
+
+def test_empty():
+    assert label_entropy(np.array([], dtype=int)) == 0.0
+    assert label_entropy(np.full(10, -1)) == 0.0
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_entropy_bounds(labels):
+    """0 <= H <= log(num_classes) for any label multiset."""
+    h = label_entropy(np.array(labels), num_classes=10)
+    assert -1e-12 <= h <= np.log(10) + 1e-12
+
+
+@given(st.integers(2, 6), st.integers(20, 200))
+@settings(max_examples=30, deadline=None)
+def test_partition_entropies_shape_and_bounds(num_parts, n):
+    rng = np.random.default_rng(n)
+    labels = rng.integers(0, 4, n)
+    parts = rng.integers(0, num_parts, n)
+    ents = partition_entropies(labels, parts, num_parts, 4)
+    assert ents.shape == (num_parts,)
+    assert (ents >= 0).all() and (ents <= np.log(4) + 1e-12).all()
+
+
+def test_partition_stats_cut_counts():
+    # path graph 0-1-2-3, split {0,1} {2,3}: cut edges = (1,2),(2,1) = 2
+    indptr = np.array([0, 1, 3, 5, 6])
+    indices = np.array([1, 0, 2, 1, 3, 2])
+    labels = np.array([0, 0, 1, 1])
+    parts = np.array([0, 0, 1, 1])
+    s = partition_stats(indptr, indices, labels, parts, 2)
+    assert s.edge_cut == 2
+    assert s.entropies.tolist() == [0.0, 0.0]
+    assert s.balance == 1.0

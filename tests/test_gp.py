@@ -1,0 +1,154 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gp import (EarlyStopper, GPController, GPHyperParams,
+                           GPScheduleConfig, broadcast_to_partitions,
+                           loss_flattened, make_generalize_step,
+                           make_personalize_step)
+from repro.train.losses import prox_penalty
+from repro.train.optim import SGDM, AdamW, apply_updates
+
+
+# --------------------------------------------------------------- schedule --
+
+def test_loss_flattened_detects_plateau():
+    falling = [5.0, 4.0, 3.0, 2.0, 1.0, 0.5, 0.25]
+    flat = [1.0] * 10
+    assert not loss_flattened(falling, window=3, tol=0.02)
+    assert loss_flattened(flat, window=3, tol=0.02)
+
+
+def test_early_stopper_patience():
+    s = EarlyStopper(patience=2)
+    assert s.update(0.5, 0)         # best
+    assert not s.update(0.4, 1)
+    assert not s.update(0.4, 2)
+    assert not s.update(0.4, 3)
+    assert s.stopped
+    assert s.best == 0.5 and s.best_epoch == 0
+
+
+def test_controller_phases():
+    ctrl = GPController(num_partitions=3,
+                        config=GPScheduleConfig(max_epochs=50, min_phase0_epochs=2))
+    for i in range(6):
+        ctrl.record_phase0(1.0, 0.5)          # flat losses
+    assert ctrl.should_personalize()
+    ctrl.start_personalization()
+    assert ctrl.phase == 1
+    # partition 1 keeps improving, 0 and 2 stall -> they stop first
+    for i in range(12):
+        scores = np.array([0.5, 0.5 + 0.01 * i, 0.5])
+        ctrl.record_phase1(scores)
+        if ctrl.done:
+            break
+    assert not ctrl.active_partitions[0]
+    assert not ctrl.active_partitions[2]
+
+
+# ------------------------------------------------------------------ steps --
+
+def _quadratic_loss(target):
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] - target) ** 2) + 0.0 * batch["x"].sum()
+    return loss_fn
+
+
+def test_generalize_step_descends():
+    loss_fn = _quadratic_loss(jnp.ones(4))
+    opt = SGDM(lr=0.1, momentum=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt_state = opt.init(params)
+    step = jax.jit(make_generalize_step(loss_fn, opt))
+    batch = {"x": jnp.zeros(1)}
+    losses = []
+    for _ in range(20):
+        params, opt_state, loss = step(params, opt_state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_personalize_step_prox_pull():
+    """With a huge lambda the personal weights must stay near W^G even when
+    the local loss pulls elsewhere."""
+    opt = SGDM(lr=0.02, momentum=0.0)
+    global_params = {"w": jnp.zeros(3)}
+    targets = jnp.stack([jnp.ones(3), -jnp.ones(3)])   # two partitions
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] - batch["t"]) ** 2)
+
+    def run(lam):
+        pstep = jax.jit(make_personalize_step(
+            loss_fn, opt, GPHyperParams(lambda_prox=lam)))
+        pparams = broadcast_to_partitions(global_params, 2)
+        popt = jax.vmap(opt.init)(pparams)
+        active = jnp.ones(2, bool)
+        batch = {"t": targets}
+        for _ in range(100):
+            pparams, popt, losses = pstep(pparams, popt, batch, global_params, active)
+        return pparams
+
+    free = run(0.0)
+    tight = run(20.0)
+    # free personalization reaches local optima
+    assert jnp.allclose(free["w"][0], jnp.ones(3), atol=0.05)
+    assert jnp.allclose(free["w"][1], -jnp.ones(3), atol=0.05)
+    # prox-regularized stays near the global model
+    dist_free = prox_penalty({"w": free["w"][0]}, global_params)
+    dist_tight = prox_penalty({"w": tight["w"][0]}, global_params)
+    assert dist_tight < 0.2 * dist_free
+
+
+def test_personalize_active_mask_freezes():
+    opt = SGDM(lr=0.1, momentum=0.0)
+    global_params = {"w": jnp.zeros(2)}
+
+    def loss_fn(params, batch):
+        return jnp.sum(params["w"] ** 2) - 2 * jnp.sum(params["w"])  # min at 1
+
+    pstep = jax.jit(make_personalize_step(loss_fn, opt,
+                                          GPHyperParams(use_prox=False)))
+    pparams = broadcast_to_partitions(global_params, 2)
+    popt = jax.vmap(opt.init)(pparams)
+    active = jnp.array([True, False])
+    batch = {"x": jnp.zeros((2, 1))}
+    for _ in range(10):
+        pparams, popt, _ = pstep(pparams, popt, batch, global_params, active)
+    assert float(jnp.abs(pparams["w"][0] - 1.0).max()) < 0.2   # trained
+    assert float(jnp.abs(pparams["w"][1]).max()) == 0.0        # frozen
+
+
+def test_personalize_no_cross_partition_leakage():
+    """Each partition's result must depend only on its own batch."""
+    opt = SGDM(lr=0.1, momentum=0.0)
+    gp = {"w": jnp.zeros(2)}
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] - batch["t"]) ** 2)
+
+    pstep = jax.jit(make_personalize_step(loss_fn, opt, GPHyperParams(use_prox=False)))
+    base = jnp.stack([jnp.ones(2), 2 * jnp.ones(2)])
+    for other in (5.0, -3.0):
+        pparams = broadcast_to_partitions(gp, 2)
+        popt = jax.vmap(opt.init)(pparams)
+        batch = {"t": base.at[1].set(other)}
+        pparams, _, _ = pstep(pparams, popt, batch, gp, jnp.ones(2, bool))
+        first = np.asarray(pparams["w"][0])
+        if other == 5.0:
+            ref = first
+    assert np.allclose(first, ref)
+
+
+# -------------------------------------------------------------- optimizers --
+
+def test_adamw_decoupled_decay():
+    opt = AdamW(lr=0.1, weight_decay=0.5)
+    params = {"w": jnp.ones(3)}
+    state = opt.init(params)
+    zero_grads = {"w": jnp.zeros(3)}
+    updates, state = opt.update(zero_grads, state, params)
+    new = apply_updates(params, updates)
+    assert float(new["w"][0]) < 1.0   # decay shrinks weights w/o gradient

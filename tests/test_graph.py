@@ -1,0 +1,165 @@
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition_graph
+from repro.graph import (BENCHMARKS, GraphSAGE, NeighborSampler,
+                         build_partitioned_graph, make_benchmark)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return make_benchmark(BENCHMARKS["tiny"])
+
+
+def test_benchmark_properties(tiny):
+    g = tiny
+    assert g.num_nodes == 600
+    assert len(g.indptr) == g.num_nodes + 1
+    assert g.indices.max() < g.num_nodes
+    # splits are disjoint
+    tr, va, te = set(g.train_idx), set(g.val_idx), set(g.test_idx)
+    assert not (tr & va) and not (tr & te) and not (va & te)
+    # labelled fraction respected
+    assert (g.labels[g.train_idx] >= 0).all()
+
+
+def test_benchmark_homophily(tiny):
+    """Generated graphs must actually be homophilous (EW's precondition)."""
+    g = tiny
+    src = g.indices
+    dst = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+    same = (g.labels[src] == g.labels[dst]).mean()
+    k = g.num_classes
+    base = np.square(np.bincount(g.labels[g.labels >= 0]) /
+                     (g.labels >= 0).sum()).sum()
+    assert same > 2 * base   # far above random mixing
+
+
+def test_benchmark_class_imbalance():
+    g = make_benchmark(BENCHMARKS["products-s"])
+    counts = np.bincount(g.labels[g.labels >= 0])
+    assert counts.max() > 5 * max(1, counts.min())   # Zipf tail
+
+
+def test_neighbor_sampler_shapes(tiny):
+    s = NeighborSampler(tiny, fanouts=(7, 3), seed=0)
+    blocks = s.sample(tiny.train_idx[:32])
+    assert blocks.nbrs1.shape == (32, 7)
+    assert blocks.nbrs2.shape == (32 * 7, 3)
+    x_t, x_1, x_2 = blocks.feature_views(tiny.features)
+    assert x_t.shape == (32, tiny.feature_dim)
+    assert x_1.shape == (32, 7, tiny.feature_dim)
+    assert x_2.shape == (32, 7, 3, tiny.feature_dim)
+
+
+def test_neighbor_sampler_valid_neighbors(tiny):
+    """Every sampled neighbour is a true in-neighbour (or a self loop for
+    isolated nodes)."""
+    s = NeighborSampler(tiny, fanouts=(5, 5), seed=1)
+    nodes = tiny.train_idx[:20]
+    blocks = s.sample(nodes)
+    for i, v in enumerate(nodes):
+        nbrs = set(tiny.neighbors(v).tolist()) or {int(v)}
+        assert set(blocks.nbrs1[i].tolist()) <= nbrs | {int(v)}
+
+
+def test_sage_full_vs_pallas_segment_agg(tiny):
+    """GraphSAGE full-graph forward via the Pallas kernel == jnp segment ops."""
+    from repro.kernels import ops
+    g = tiny
+    model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                      num_classes=g.num_classes)
+    params = model.init(0)
+    src = jnp.asarray(g.indices)
+    dst = jnp.asarray(np.repeat(np.arange(g.num_nodes), np.diff(g.indptr)))
+    base = model.apply_full(params, jnp.asarray(g.features), src, dst,
+                            g.num_nodes)
+    agg = ops.make_segment_agg(g.indptr, g.indices, mean=True)
+    fused = model.apply_full(params, jnp.asarray(g.features), src, dst,
+                             g.num_nodes,
+                             segment_agg=lambda h, *_: agg(h))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(fused),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_partitioned_graph_invariants(tiny):
+    g = tiny
+    r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                        method="metis", seed=0)
+    pg = build_partitioned_graph(g, r.parts, 4)
+    # every node owned exactly once
+    owned = np.concatenate([pg.global_ids[p, :pg.n_own[p]] for p in range(4)])
+    assert sorted(owned.tolist()) == list(range(g.num_nodes))
+    # halo slots reference real nodes of other partitions
+    for p in range(4):
+        halo = pg.global_ids[p, pg.n_own[p]: pg.n_own[p] + pg.n_halo[p]]
+        assert (r.parts[halo] != p).all()
+    # edge destinations are owned & local
+    for p in range(4):
+        real = pg.edge_mask[p] > 0
+        assert (pg.edge_dst[p][real] < pg.n_own[p]).all()
+
+
+def test_ew_reduces_halo_volume(tiny):
+    """The paper's comm claim: EW cut < random cut => smaller halo."""
+    g = tiny
+    r_ew = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                           method="ew", seed=0)
+    r_rnd = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                            method="random", seed=0)
+    pg_ew = build_partitioned_graph(g, r_ew.parts, 4)
+    pg_rnd = build_partitioned_graph(g, r_rnd.parts, 4)
+    assert pg_ew.halo_bytes_per_layer < pg_rnd.halo_bytes_per_layer
+
+
+DIST_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.graph import make_benchmark, BENCHMARKS, GraphSAGE, build_partitioned_graph, make_distributed_forward
+from repro.core import partition_graph
+
+g = make_benchmark(BENCHMARKS["tiny"])
+model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=32, num_classes=g.num_classes)
+params = model.init(0)
+r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4, method="ew", seed=0)
+pg = build_partitioned_graph(g, r.parts, 4)
+mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+fwd = make_distributed_forward(model, {"max_nodes": pg.max_nodes}, axis_name="data")
+shard = dict(features=pg.features, send_idx=pg.send_idx, send_mask=pg.send_mask,
+             recv_pos=pg.recv_pos, edge_src=pg.edge_src, edge_dst=pg.edge_dst,
+             edge_mask=pg.edge_mask)
+specs = {k: P("data", *([None]*(v.ndim-1))) for k, v in shard.items()}
+smfwd = jax.jit(jax.shard_map(
+    lambda prm, sh: fwd(prm, jax.tree.map(lambda x: x[0], sh)),
+    mesh=mesh, in_specs=(P(), specs), out_specs=P("data", None),
+    check_vma=False))
+dl = np.asarray(smfwd(params, shard)).reshape(4, pg.max_nodes, g.num_classes)
+src = g.indices; dst = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
+full = np.asarray(model.apply_full(params, jnp.asarray(g.features),
+                                   jnp.asarray(src), jnp.asarray(dst), g.num_nodes))
+err = 0.0
+for p in range(4):
+    for i in range(pg.n_own[p]):
+        err = max(err, float(np.abs(dl[p, i] - full[pg.global_ids[p, i]]).max()))
+assert err < 1e-4, err
+print("OK", err)
+"""
+
+
+def test_distributed_forward_matches_centralized():
+    """shard_map halo-exchange forward == centralized full-graph forward
+    (run in a subprocess so the 4-device XLA flag doesn't leak)."""
+    res = subprocess.run([sys.executable, "-c", DIST_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout
