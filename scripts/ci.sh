@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast deterministic suite, then a pass/fail delta against the
+# checked-in seed baseline (tests/seed_baseline.txt).
+#
+#   scripts/ci.sh          tier-1 (-m "not slow") + baseline delta
+#   scripts/ci.sh slow     the -m slow stage (kernel sweeps, multi-device
+#                          subprocess compiles, the full fp64 parity matrix)
+#   scripts/ci.sh all      both stages
+set -u
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+mode=${1:-tier1}
+if [ "$mode" = "slow" ]; then
+    exec python -m pytest -m slow -q
+fi
+
+out=$(python -m pytest -m "not slow" -q 2>&1)
+pytest_status=$?
+echo "$out" | tail -25
+
+# exit codes >= 2 mean pytest itself broke (interrupted / internal / usage
+# error) — the printed counts are unreliable, never report OK from them
+if [ "$pytest_status" -ge 2 ]; then
+    echo "ABORT: pytest exited with status $pytest_status (not a test-failure exit)"
+    exit "$pytest_status"
+fi
+
+count() { echo "$out" | grep -oE "[0-9]+ $1" | tail -1 | grep -oE "[0-9]+" || echo 0; }
+passed=$(count passed)
+failed=$(count failed)
+errors=$(count "errors?")
+
+baseline=tests/seed_baseline.txt
+read -r bpass bfail berr <<<"$(awk '/^counts/{print $2, $3, $4}' "$baseline")"
+
+echo
+echo "tier-1:        passed=$passed failed=$failed errors=$errors"
+echo "seed baseline: passed=$bpass failed=$bfail errors=$berr"
+bad_now=$((failed + errors))
+bad_seed=$((bfail + berr))
+echo "delta:         passed=$((passed - bpass)) failing=$((bad_now - bad_seed))"
+
+if [ "$bad_now" -ge "$bad_seed" ] && [ "$bad_seed" -gt 0 ]; then
+    echo "REGRESSION: failing count did not strictly decrease vs seed"
+    exit 1
+fi
+if [ "$bad_seed" -eq 0 ] && [ "$bad_now" -gt 0 ]; then
+    echo "REGRESSION: new failures vs clean baseline"
+    exit 1
+fi
+if [ "$passed" -lt "$bpass" ]; then
+    echo "REGRESSION: fewer tests passing than at seed"
+    exit 1
+fi
+echo "OK: no regression vs seed baseline"
+
+if [ "$mode" = "all" ]; then
+    python -m pytest -m slow -q || exit 1
+fi
+exit 0

@@ -12,6 +12,7 @@ from .gp import (
     broadcast_to_partitions,
     loss_flattened,
     make_generalize_step,
+    make_personalize_partition_step,
     make_personalize_step,
 )
 
@@ -20,6 +21,7 @@ __all__ = [
     "partition_graph", "PartitionResult", "assign_edge_weights", "metis_kway",
     "CBSampler", "cbs_probabilities",
     "GPController", "GPScheduleConfig", "GPHyperParams", "EarlyStopper",
-    "loss_flattened", "make_generalize_step", "make_personalize_step",
+    "loss_flattened", "make_generalize_step", "make_personalize_partition_step",
+    "make_personalize_step",
     "broadcast_to_partitions",
 ]

@@ -2,12 +2,14 @@ from .schedule import EarlyStopper, GPController, GPScheduleConfig, loss_flatten
 from .trainer import (
     GPHyperParams,
     make_generalize_step,
+    make_personalize_partition_step,
     make_personalize_step,
     broadcast_to_partitions,
 )
 
 __all__ = [
     "EarlyStopper", "GPController", "GPScheduleConfig", "loss_flattened",
-    "GPHyperParams", "make_generalize_step", "make_personalize_step",
+    "GPHyperParams", "make_generalize_step", "make_personalize_partition_step",
+    "make_personalize_step",
     "broadcast_to_partitions",
 ]

@@ -30,6 +30,7 @@ from ...train.optim import OptState, apply_updates
 __all__ = [
     "GPHyperParams",
     "make_generalize_step",
+    "make_personalize_partition_step",
     "make_personalize_step",
     "broadcast_to_partitions",
 ]
@@ -69,23 +70,20 @@ def make_generalize_step(
     return step
 
 
-def make_personalize_step(
+def make_personalize_partition_step(
     loss_fn: LossFn,
     optimizer,
     hp: GPHyperParams = GPHyperParams(),
 ) -> Callable:
-    """Phase-1 step over per-partition params.
+    """SINGLE-partition phase-1 step — the scalar core that
+    :func:`make_personalize_step` vmaps over partitions.
 
-    Signature: (params_p, opt_state_p, batch_p, global_params, active_p)
-             -> (params_p, opt_state_p, loss_p)
-
-    All ``*_p`` arguments carry a leading ``partitions`` axis; the step is
-    vmapped over it, so under pjit the partition axis shards over the data
-    mesh axes and each shard group trains its own replica with ZERO
-    cross-partition collectives — the paper's communication saving.
-
-    ``active_p`` (bool per partition) masks both the parameter update and the
-    optimizer-state advance once that partition early-stops.
+    Exposed separately so (a) the SPMD engine's ``shard_map`` path can run it
+    one-partition-per-device without a redundant inner vmap, and (b) the
+    sequential reference driver (the parity oracle in
+    ``tests/test_engine_parity.py``) executes the IDENTICAL math in a Python
+    loop.  Signature: (params, opt_state, batch, global_params, active)
+    -> (params, opt_state, loss), no leading partitions axis anywhere.
     """
 
     def one_partition(params, opt_state, batch, global_params, active):
@@ -105,6 +103,29 @@ def make_personalize_step(
         sel = lambda new, old: jnp.where(active, new, old)
         kept_opt_state = jax.tree.map(sel, new_opt_state, opt_state)
         return new_params, kept_opt_state, loss
+
+    return one_partition
+
+
+def make_personalize_step(
+    loss_fn: LossFn,
+    optimizer,
+    hp: GPHyperParams = GPHyperParams(),
+) -> Callable:
+    """Phase-1 step over per-partition params.
+
+    Signature: (params_p, opt_state_p, batch_p, global_params, active_p)
+             -> (params_p, opt_state_p, loss_p)
+
+    All ``*_p`` arguments carry a leading ``partitions`` axis; the step is
+    vmapped over it, so under pjit the partition axis shards over the data
+    mesh axes and each shard group trains its own replica with ZERO
+    cross-partition collectives — the paper's communication saving.
+
+    ``active_p`` (bool per partition) masks both the parameter update and the
+    optimizer-state advance once that partition early-stops.
+    """
+    one_partition = make_personalize_partition_step(loss_fn, optimizer, hp)
 
     # every per-partition arg (params, opt state incl. step counter, batch,
     # active flag) carries a leading partition axis; init the opt state with

@@ -1,0 +1,199 @@
+"""Sequential reference driver — the parity oracle for the SPMD engine.
+
+Executes the EXACT math of :class:`repro.engine.spmd.SPMDEngine` as legible
+Python loops over partitions: per-partition gradients in a loop, the
+all-reduce as a deterministic stack-and-sum, the halo exchange as explicit
+gather / transpose / scatter.  ``tests/test_engine_parity.py`` asserts the
+fused engine reproduces this path's losses and micro-F1 bit-for-bit in
+float64 — the self-verification the refactor ships with (DESIGN.md §3).
+
+Aggregation always uses the jnp segment-op reference (kernels/ref.py math):
+the Pallas kernel is validated against the same reference separately in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.gp.trainer import GPHyperParams, make_personalize_partition_step
+from ..graph.distributed import PartitionedGraph, make_ref_mean_agg
+from ..train.metrics import f1_scores_jnp
+from ..train.optim import apply_updates
+
+__all__ = ["SequentialReference"]
+
+
+class SequentialReference:
+    """Same public surface as SPMDEngine (phase0_epoch / phase1_epoch /
+    evaluate), Python-loop execution."""
+
+    mode = "sequential"
+
+    def __init__(self, model, loss_fn, optimizer, pg: PartitionedGraph,
+                 hp: GPHyperParams = GPHyperParams(), config=None):
+        f = config.dtype if config is not None else jnp.float32
+        self.model = model
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.num_parts = pg.num_parts
+        self.num_classes = model.num_classes
+        self.max_nodes = pg.max_nodes
+        self.features = jnp.asarray(pg.features, f)        # (P, maxN, D)
+        self.send_idx = jnp.asarray(pg.send_idx)
+        self.send_mask = jnp.asarray(pg.send_mask, f)
+        self.recv_pos = jnp.asarray(pg.recv_pos)
+        self.labels = jnp.asarray(pg.labels)
+        self.masks = {
+            "train": np.asarray(pg.train_mask),
+            "val": np.asarray(pg.val_mask),
+            "test": np.asarray(pg.test_mask),
+        }
+        # per-partition edge views for the reference aggregation
+        self._agg = make_ref_mean_agg(pg.max_nodes)
+        self._edge_shards = [
+            {"edge_src": jnp.asarray(pg.edge_src[p]),
+             "edge_dst": jnp.asarray(pg.edge_dst[p]),
+             "edge_mask": jnp.asarray(pg.edge_mask[p], f)}
+            for p in range(pg.num_parts)
+        ]
+        self._grad_step = jax.jit(jax.value_and_grad(loss_fn))
+        self._pstep1 = jax.jit(make_personalize_partition_step(
+            loss_fn, optimizer, hp))
+
+        # the all-reduce + optimizer update runs as ONE jitted function:
+        # AdamW keeps float32 moments, and XLA's fused rounding of that
+        # arithmetic differs from eager op-by-op dispatch at the last ulp —
+        # jitting at this granularity is what makes the engine's in-scan
+        # update bit-for-bit reproducible here (see test_engine_parity)
+        P = pg.num_parts
+
+        @jax.jit
+        def _apply_avg(params, opt_state, grads_stacked):
+            grads = jax.tree.map(lambda g: jnp.sum(g, axis=0) / P,
+                                 grads_stacked)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state
+
+        self._apply_avg = _apply_avg
+
+    # --------------------------------------------------------- forward pass
+    def _exchange(self, hs: list) -> list:
+        """Explicit halo exchange: recv[q][p] = sent[p][q] (the all_to_all
+        transpose), scattered into each partition's halo slots."""
+        P = self.num_parts
+        sent = [hs[p][self.send_idx[p]] * self.send_mask[p][..., None]
+                for p in range(P)]                     # each (P, maxS, D)
+        out = []
+        for q in range(P):
+            recv = jnp.stack([sent[p][q] for p in range(P)])
+            flat_pos = self.recv_pos[q].reshape(-1)
+            flat_val = recv.reshape(-1, hs[q].shape[-1])
+            out.append(hs[q].at[flat_pos].set(flat_val.astype(hs[q].dtype)))
+        return out
+
+    def _full_forward(self, params_list: list) -> list:
+        """Layer-synchronous 2-layer GraphSAGE over all partitions — the same
+        schedule the per-shard fwd runs, unrolled in Python."""
+        P = self.num_parts
+        hs = [self.features[p] for p in range(P)]
+        hs = self._exchange(hs)
+        h1 = []
+        for p in range(P):
+            lp = params_list[p].layer1
+            agg = self._agg(hs[p], self._edge_shards[p])
+            h1.append(jax.nn.relu(hs[p] @ lp.w_self + agg @ lp.w_neigh + lp.b))
+        h1 = self._exchange(h1)
+        logits = []
+        for p in range(P):
+            lp = params_list[p].layer2
+            agg = self._agg(h1[p], self._edge_shards[p])
+            logits.append(h1[p] @ lp.w_self + agg @ lp.w_neigh + lp.b)
+        return logits
+
+    def _eval(self, params_list: list, split: str):
+        logits = self._full_forward(params_list)
+        micros, preds = [], []
+        for p in range(self.num_parts):
+            pr = jnp.argmax(logits[p], axis=-1)
+            lab = jnp.where(jnp.asarray(self.masks[split][p]),
+                            self.labels[p], -1)
+            micro, _, _ = f1_scores_jnp(pr, lab, self.num_classes)
+            micros.append(micro)
+            preds.append(pr)
+        return jnp.stack(micros), jnp.stack(preds)
+
+    # ------------------------------------------------------- public surface
+    def phase0_epoch(self, params, opt_state, batches):
+        import time
+
+        P = self.num_parts
+        leaves = jax.tree_util.tree_leaves(batches)
+        iters = leaves[0].shape[0]
+        # warm the jit caches on the first iteration's shapes (results
+        # discarded — the functions are pure) so the timed window below
+        # excludes XLA compilation, matching the SPMD engine's AOT contract
+        b0 = jax.tree.map(lambda x: x[0, 0], batches)
+        _, g0 = self._grad_step(params, b0)
+        z = jax.tree.map(lambda g: jnp.stack([g] * P), g0)
+        jax.block_until_ready(self._apply_avg(params, opt_state, z))
+
+        t0 = time.perf_counter()
+        all_losses = []
+        for it in range(iters):
+            losses, grads = [], []
+            for p in range(P):
+                b = jax.tree.map(lambda x: x[it, p], batches)
+                l, g = self._grad_step(params, b)
+                losses.append(l)
+                grads.append(g)
+            # deterministic all-reduce (stack then axis-0 sum, / P — the same
+            # reduction the stacked engine performs) + jitted update
+            stacked = jax.tree.map(lambda *gs: jnp.stack(gs), *grads)
+            params, opt_state = self._apply_avg(params, opt_state, stacked)
+            all_losses.append(jnp.stack(losses))
+        jax.block_until_ready(params)
+        dt = time.perf_counter() - t0
+        val_micro, _ = self._eval([params] * P, "val")
+        return params, opt_state, jnp.stack(all_losses), val_micro, dt
+
+    def phase1_epoch(self, pparams, popt, batches, global_params, active):
+        import time
+
+        P = self.num_parts
+        active = np.asarray(active)
+        leaves = jax.tree_util.tree_leaves(batches)
+        iters = leaves[0].shape[0]
+        pp = [jax.tree.map(lambda x: x[p], pparams) for p in range(P)]
+        po = [jax.tree.map(lambda x: x[p], popt) for p in range(P)]
+        # compile warm-up outside the timed window (pure, results discarded)
+        jax.block_until_ready(self._pstep1(
+            pp[0], po[0], jax.tree.map(lambda x: x[0, 0], batches),
+            global_params, jnp.asarray(active[0])))
+
+        t0 = time.perf_counter()
+        all_losses = []
+        for it in range(iters):
+            losses = []
+            for p in range(P):
+                b = jax.tree.map(lambda x: x[it, p], batches)
+                pp[p], po[p], l = self._pstep1(pp[p], po[p], b, global_params,
+                                              jnp.asarray(active[p]))
+                losses.append(l)
+            all_losses.append(jnp.stack(losses))
+        jax.block_until_ready(pp)
+        dt = time.perf_counter() - t0
+        val_micro, _ = self._eval(pp, "val")
+        from .stacking import stack_pytrees
+        return (stack_pytrees(pp), stack_pytrees(po),
+                jnp.stack(all_losses), val_micro, dt)
+
+    def evaluate(self, params, split: str = "test",
+                 per_partition_params: bool = True):
+        P = self.num_parts
+        if per_partition_params:
+            plist = [jax.tree.map(lambda x: x[p], params) for p in range(P)]
+        else:
+            plist = [params] * P
+        return self._eval(plist, split)

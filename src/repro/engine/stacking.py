@@ -1,0 +1,76 @@
+"""Host-side preprocessing for the SPMD engine: stack every partition's
+blocked-CSR aggregation structure (and per-epoch minibatches) into uniform
+``(P, ...)`` arrays.
+
+The Pallas ``segment_agg`` kernel needs a static block layout; partitions
+have ragged edge counts, so each partition's :class:`EdgeBlocks` is padded to
+the fleet-wide maximum ``(num_blocks, edges_per_block)``.  Padding edges
+carry ``mask == 0`` and source id 0, so they gather a real row but contribute
+nothing to the reduction — the same trick the kernel already uses for
+intra-block padding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..graph.distributed import PartitionedGraph
+from ..kernels.segment_agg import BEC, BN, build_edge_blocks
+
+__all__ = ["StackedBlocks", "build_stacked_blocks", "stack_pytrees"]
+
+
+@dataclass(frozen=True)
+class StackedBlocks:
+    """Per-partition blocked CSR, padded to common shapes (leading axis P)."""
+
+    num_blocks: int            # nb (common across partitions)
+    edges_per_block: int       # BE (fleet-wide max, multiple of BEC)
+    src: np.ndarray            # (P, nb, BE) int32 local source ids, pad -> 0
+    local_dst: np.ndarray      # (P, nb, BE) int32 in [0, BN)
+    mask: np.ndarray           # (P, nb, BE) float32
+    deg: np.ndarray            # (P, nb, BN) float32 (>=1 where real)
+
+
+def _local_csr(pg: PartitionedGraph, p: int) -> tuple[np.ndarray, np.ndarray]:
+    """Rebuild partition p's local CSR (dst-major, ascending — the order
+    build_partitioned_graph emits) from its padded edge arrays."""
+    real = pg.edge_mask[p] > 0
+    src = pg.edge_src[p][real].astype(np.int64)
+    dst = pg.edge_dst[p][real].astype(np.int64)
+    counts = np.bincount(dst, minlength=pg.max_nodes)
+    indptr = np.zeros(pg.max_nodes + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, src
+
+
+def build_stacked_blocks(pg: PartitionedGraph, bn: int = BN,
+                         bec: int = BEC) -> StackedBlocks:
+    per_part = []
+    for p in range(pg.num_parts):
+        indptr, indices = _local_csr(pg, p)
+        per_part.append(build_edge_blocks(indptr, indices, bn=bn, bec=bec))
+
+    nb = max(b.num_blocks for b in per_part)
+    be = max(b.edges_per_block for b in per_part)
+    P = pg.num_parts
+    src = np.zeros((P, nb, be), dtype=np.int32)
+    ldst = np.zeros((P, nb, be), dtype=np.int32)
+    mask = np.zeros((P, nb, be), dtype=np.float32)
+    deg = np.ones((P, nb, bn), dtype=np.float32)
+    for p, b in enumerate(per_part):
+        src[p, : b.num_blocks, : b.edges_per_block] = b.src
+        ldst[p, : b.num_blocks, : b.edges_per_block] = b.local_dst
+        mask[p, : b.num_blocks, : b.edges_per_block] = b.mask
+        deg[p, : b.num_blocks] = b.deg
+    return StackedBlocks(num_blocks=nb, edges_per_block=be,
+                         src=src, local_dst=ldst, mask=mask, deg=deg)
+
+
+def stack_pytrees(trees):
+    """Stack a list of identical-structure pytrees along a new leading axis."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)

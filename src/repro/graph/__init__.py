@@ -2,10 +2,13 @@ from .csr import CSRGraph
 from .synthetic import SyntheticSpec, make_benchmark, BENCHMARKS
 from .sampling import NeighborSampler, SampledBlocks
 from .sage import GraphSAGE, SAGEParams
-from .distributed import PartitionedGraph, build_partitioned_graph, make_distributed_forward
+from .distributed import (PartitionedGraph, build_partitioned_graph,
+                          make_distributed_forward, make_pallas_mean_agg,
+                          make_ref_mean_agg)
 
 __all__ = [
     "CSRGraph", "SyntheticSpec", "make_benchmark", "BENCHMARKS",
     "NeighborSampler", "SampledBlocks", "GraphSAGE", "SAGEParams",
     "PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
+    "make_pallas_mean_agg", "make_ref_mean_agg",
 ]

@@ -29,7 +29,8 @@ import numpy as np
 from .csr import CSRGraph
 from .sage import GraphSAGE, SAGEParams
 
-__all__ = ["PartitionedGraph", "build_partitioned_graph", "make_distributed_forward"]
+__all__ = ["PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
+           "make_ref_mean_agg", "make_pallas_mean_agg"]
 
 
 @dataclass
@@ -184,31 +185,72 @@ def _halo_exchange(h, send_idx, send_mask, recv_pos, axis_name: str):
     return h.at[flat_pos].set(flat_val.astype(h.dtype))
 
 
-def make_distributed_forward(model: GraphSAGE, pg_meta: dict, axis_name: str = "data"):
+def make_ref_mean_agg(max_nodes: int):
+    """jnp segment-op mean aggregation over a shard's local edge list — the
+    interpret-mode / differentiable fallback (same math as kernels/ref.py,
+    specialised to the padded shard layout)."""
+
+    def mean_agg(h, shard):
+        msg = h[shard["edge_src"]] * shard["edge_mask"][:, None].astype(h.dtype)
+        s = jax.ops.segment_sum(msg, shard["edge_dst"], num_segments=max_nodes)
+        deg = jax.ops.segment_sum(shard["edge_mask"].astype(h.dtype),
+                                  shard["edge_dst"], num_segments=max_nodes)
+        return s / jnp.maximum(deg, 1.0)[:, None]
+
+    return mean_agg
+
+
+def make_pallas_mean_agg(max_nodes: int, *, interpret: bool = True):
+    """Pallas-kernel mean aggregation: the GNN hot-spot on the MXU.
+
+    Reads the blocked-CSR structure (``blk_src``/``blk_dst``/``blk_mask``/
+    ``blk_deg``, built by ``repro.engine.stacking.build_stacked_blocks``)
+    from the shard, gathers messages in XLA and reduces them with
+    ``kernels.segment_agg.segment_agg_blocks``.  Forward-only (no VJP): the
+    engine uses it for full-graph inference; training gradients flow through
+    the sampled minibatch path.
+    """
+    from ..kernels.segment_agg import segment_agg_blocks
+
+    def mean_agg(h, shard):
+        src = shard["blk_src"].reshape(-1)            # (nb*BE,) local ids
+        msgs = h[src]                                  # XLA gather
+        out = segment_agg_blocks(msgs, shard["blk_dst"], shard["blk_mask"],
+                                 shard["blk_deg"], mean=True,
+                                 interpret=interpret)
+        return out[:max_nodes].astype(h.dtype)
+
+    return mean_agg
+
+
+def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
+                             axis_name: str = "data", agg=None):
     """Build the per-shard 2-layer forward with halo exchange.
 
     Returns ``fwd(params, shard) -> logits`` where ``shard`` is the
     per-partition slice of the stacked PartitionedGraph arrays; call it
-    inside ``jax.shard_map`` (or vmap for the single-host simulation).
+    inside ``shard_map`` over a partition mesh, or under
+    ``vmap(..., axis_name=...)`` for the single-device stacked fallback
+    (jax batches ``all_to_all`` across the vmapped axis with the same
+    transpose semantics — see DESIGN.md §3).
+
+    ``agg(h, shard) -> (max_nodes, D)`` selects the aggregation backend;
+    default is the jnp segment-op reference, the SPMD engine passes
+    :func:`make_pallas_mean_agg` to put the Pallas kernel on the hot path.
     """
     max_nodes = pg_meta["max_nodes"]
-
-    def mean_agg(h, edge_src, edge_dst, edge_mask):
-        msg = h[edge_src] * edge_mask[:, None]
-        s = jax.ops.segment_sum(msg, edge_dst, num_segments=max_nodes)
-        deg = jax.ops.segment_sum(edge_mask, edge_dst, num_segments=max_nodes)
-        return s / jnp.maximum(deg, 1.0)[:, None]
+    mean_agg = agg if agg is not None else make_ref_mean_agg(max_nodes)
 
     def fwd(params: SAGEParams, shard: dict) -> jnp.ndarray:
         h = shard["features"]
         h = _halo_exchange(h, shard["send_idx"], shard["send_mask"],
                            shard["recv_pos"], axis_name)
-        agg = mean_agg(h, shard["edge_src"], shard["edge_dst"], shard["edge_mask"])
-        h1 = jax.nn.relu(h @ params.layer1.w_self + agg @ params.layer1.w_neigh
+        agg0 = mean_agg(h, shard)
+        h1 = jax.nn.relu(h @ params.layer1.w_self + agg0 @ params.layer1.w_neigh
                          + params.layer1.b)
         h1 = _halo_exchange(h1, shard["send_idx"], shard["send_mask"],
                             shard["recv_pos"], axis_name)
-        agg1 = mean_agg(h1, shard["edge_src"], shard["edge_dst"], shard["edge_mask"])
+        agg1 = mean_agg(h1, shard)
         logits = (h1 @ params.layer2.w_self + agg1 @ params.layer2.w_neigh
                   + params.layer2.b)
         return logits

@@ -27,11 +27,26 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["EdgeBlocks", "build_edge_blocks", "segment_agg_pallas"]
+__all__ = ["EdgeBlocks", "build_edge_blocks", "segment_agg_pallas",
+           "segment_agg_blocks", "pallas_call_count", "reset_pallas_call_count"]
 
 BN = 128    # destination nodes per block
 BD = 256    # feature lanes per block (multiple of 128)
 BEC = 128   # edge chunk fed to the MXU contraction per step
+
+# Trace-time observability: bumped every time the Pallas kernel is staged
+# into a jaxpr.  Lets callers (and tests) assert the kernel is actually on
+# the hot path rather than silently swapped for the jnp reference.
+_PALLAS_CALLS = 0
+
+
+def pallas_call_count() -> int:
+    return _PALLAS_CALLS
+
+
+def reset_pallas_call_count() -> None:
+    global _PALLAS_CALLS
+    _PALLAS_CALLS = 0
 
 
 @dataclass(frozen=True)
@@ -102,25 +117,33 @@ def _segment_agg_kernel(msgs_ref, ldst_ref, mask_ref, deg_ref, out_ref, *, be: i
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
-def segment_agg_pallas(
+def segment_agg_blocks(
     msgs: jnp.ndarray,        # (num_blocks * BE, D) gathered edge messages
-    blocks: EdgeBlocks,
+    local_dst: jnp.ndarray,   # (num_blocks, BE) int32 in [0, BN)
+    mask: jnp.ndarray,        # (num_blocks, BE) float32
+    deg: jnp.ndarray,         # (num_blocks, BN) float32 (>=1 where real)
     *,
     mean: bool = True,
     bd: int = BD,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Blocked segment sum/mean -> (num_blocks * BN, D); caller unpads rows.
+    """Array-based kernel entry: the block structure arrives as (possibly
+    traced) arrays, so the call nests cleanly under ``vmap`` / ``shard_map``
+    where each program instance owns a different partition's blocks.  Only
+    the SHAPES must agree across instances (the SPMD engine pads them to a
+    common (nb, BE)).  Returns (num_blocks * BN, D); caller unpads rows.
 
     ``interpret=True`` runs the kernel body in Python on CPU (this container);
     on a real TPU pass ``interpret=False``.
     """
-    nb, be = blocks.num_blocks, blocks.edges_per_block
+    global _PALLAS_CALLS
+    _PALLAS_CALLS += 1
+    nb, be = local_dst.shape
+    bn = deg.shape[-1]
     d = msgs.shape[-1]
     d_pad = ((d + bd - 1) // bd) * bd
     if d_pad != d:
         msgs = jnp.pad(msgs, ((0, 0), (0, d_pad - d)))
-    bn = blocks.deg.shape[1]
 
     out = pl.pallas_call(
         functools.partial(_segment_agg_kernel, be=be, bn=bn, mean=mean),
@@ -136,8 +159,23 @@ def segment_agg_pallas(
         interpret=interpret,
     )(
         msgs.reshape(nb * be, d_pad),
-        jnp.asarray(blocks.local_dst),
-        jnp.asarray(blocks.mask),
-        jnp.asarray(blocks.deg),
+        jnp.asarray(local_dst),
+        jnp.asarray(mask),
+        jnp.asarray(deg),
     )
     return out[:, :d]
+
+
+def segment_agg_pallas(
+    msgs: jnp.ndarray,        # (num_blocks * BE, D) gathered edge messages
+    blocks: EdgeBlocks,
+    *,
+    mean: bool = True,
+    bd: int = BD,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Blocked segment sum/mean over a host-built :class:`EdgeBlocks`."""
+    return segment_agg_blocks(
+        msgs, jnp.asarray(blocks.local_dst), jnp.asarray(blocks.mask),
+        jnp.asarray(blocks.deg), mean=mean, bd=bd, interpret=interpret,
+    )

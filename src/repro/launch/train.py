@@ -13,10 +13,12 @@ CBS sampling → GP two-phase training):
             PYTHONPATH=src python -m repro.launch.train llm \
                 --arch llama3.2-1b --shards 4 --steps 60
 
-On real TPU hardware the same code paths run under the production mesh via
-``build_step`` (see dryrun.py); on CPU they run per-partition in sequence,
-which is numerically identical for phase-1 (no cross-partition collectives)
-and uses explicit gradient averaging for phase-0.
+The gnn mode executes through the SPMD engine (repro.engine): with >= N
+devices each epoch runs as one ``shard_map`` step over a partition mesh;
+on a single CPU the SAME per-shard program runs under ``vmap`` with
+identical collective semantics (DESIGN.md §3).  ``--engine sequential``
+selects the legible per-partition Python-loop reference, which the engine
+reproduces bit-for-bit in float64 (tests/test_engine_parity.py).
 """
 from __future__ import annotations
 
@@ -42,6 +44,8 @@ def run_gnn(args) -> dict:
         batch_size=args.batch_size,
         fanouts=(args.fanout, args.fanout),
         seed=args.seed,
+        engine_mode=args.engine,
+        use_pallas_agg=not args.no_pallas_agg,
     )
     result = run_eat_distgnn(cfg, verbose=True)
     print(json.dumps(result.summary(), indent=2))
@@ -144,6 +148,14 @@ def main() -> int:
     g.add_argument("--batch-size", type=int, default=256)
     g.add_argument("--fanout", type=int, default=10)
     g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--engine", default="auto",
+                   choices=("auto", "spmd", "stacked", "sequential"),
+                   help="epoch executor: shard_map over a partition mesh, "
+                        "single-device stacked vmap, or the sequential "
+                        "Python-loop reference")
+    g.add_argument("--no-pallas-agg", action="store_true",
+                   help="use the jnp segment-op fallback instead of the "
+                        "Pallas segment_agg kernel on the eval forward")
 
     l = sub.add_parser("llm")
     l.add_argument("--arch", default="llama3.2-1b")

@@ -530,9 +530,14 @@ def _ssd_chunked(xh, dt, a, bmat, cmat, chunk, init_state=None, unroll=False):
         da = dtk * a[None, None, :]                # (b, L, h)
         da_cum = jnp.cumsum(da, axis=1)
         da_sum = da_cum[:, -1]                     # (b, h)
-        # intra-chunk (quadratic, attention-like)
+        # intra-chunk (quadratic, attention-like).  The upper triangle is
+        # masked out, but its raw diff is POSITIVE and can overflow exp() to
+        # inf; a single where(mask, exp(diff), 0) then yields 0*inf = NaN in
+        # the backward pass.  Double-where: zero diff first so the unselected
+        # branch stays finite for autodiff.
         diff = da_cum[:, :, None, :] - da_cum[:, None, :, :]     # (b, i, j, h)
-        lmat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        lmask = tri[None, :, :, None]
+        lmat = jnp.where(lmask, jnp.exp(jnp.where(lmask, diff, 0.0)), 0.0)
         scores = jnp.einsum("bin,bjn->bij", ck, bk)
         y_diag = jnp.einsum("bij,bijh,bjh,bjhp->bihp", scores, lmat, dtk, xk)
         # contribution of the carried state

@@ -1,25 +1,46 @@
 """EAT-DistGNN pipeline: EW partitioning → CBS sampling → GP training.
 
 This is the paper's full experimental loop (the engine behind Tables II–V
-and Fig. 3), simulated over N logical compute hosts.  Faithfulness notes:
+and Fig. 3) over N logical compute hosts.  Since PR 1 the per-partition
+Python loop is gone: every epoch executes as two fused steps through
+``repro.engine.SPMDEngine`` (DESIGN.md §3) — one jitted trace scans all
+training iterations with the cross-partition gradient mean, a second runs
+the full-graph validation forward with its per-layer halo ``all_to_all``
+and the Pallas ``segment_agg`` aggregation.  On a multi-device host the
+same per-shard program runs under ``shard_map`` over a partition mesh; on
+one CPU it runs under ``vmap`` with identical collective semantics;
+``engine_mode="sequential"`` keeps the legible Python-loop reference (the
+parity oracle of tests/test_engine_parity.py).
+
+Faithfulness notes:
 
   · Phase-0 is synchronous data-parallel SGD: per host gradients on its own
     batch, averaged each iteration (the all-reduce), identical updates.
   · The personalization trigger is loss-curve flattening (Fig. 3 magenta).
   · Phase-1 stops aggregating; each host descends its local loss + the
     Eq. 4 prox term, with per-host early stopping and per-host best models.
+  · Evaluation (phase-1 validation and the final test) runs through the
+    DISTRIBUTED forward: boundary nodes aggregate halo embeddings computed
+    under the OWNING partition's personalized model — the semantics a real
+    deployment has, and a deliberate change from the pre-engine driver,
+    which evaluated each host's model solo over the whole graph.
   · CBS mini-epochs resample 25% of the host's training nodes by Eq. 3.
   · Sampling may cross partition boundaries exactly like DistDGL's remote
-    neighbour fetch (we account the traffic rather than forbid it).
+    neighbour fetch; comm_halo_bytes accounts BOTH that sampled remote-fetch
+    volume (cut_fraction-scaled, per training epoch) and the eval forward's
+    per-layer halo all_to_all volume (PartitionedGraph.halo_bytes_per_layer).
   · "Distributed" timing on one CPU is reported as the paper measures it:
-    per-epoch time = max over hosts (synchronous phases) or per-host
-    cumulative time (asynchronous phase-1); communication is additionally
-    reported in bytes (gradient + halo traffic), since wall-clock network
-    time cannot be measured honestly in a single-process simulation.
+    per-epoch time = max over hosts of (host-side sampling time + an equal
+    1/N share of the fused TRAIN scan), synchronous phases waiting for the
+    slowest host; phase-1 accumulates per-host time only while that host is
+    active.  Validation-forward time is excluded, as in the original
+    per-batch driver, so epoch-time ablations compare training work.  Communication is additionally reported in bytes (gradient +
+    halo traffic), since wall-clock network time cannot be measured honestly
+    in a single-process simulation.  XLA compilation is excluded (the engine
+    AOT-compiles each epoch shape before the timed call).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
@@ -27,12 +48,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .core import (GPController, GPHyperParams, GPScheduleConfig,
-                   broadcast_to_partitions, make_generalize_step,
-                   make_personalize_step, partition_graph)
+                   broadcast_to_partitions, partition_graph)
 from .core.sampler import CBSampler
-from .graph import BENCHMARKS, CSRGraph, GraphSAGE, NeighborSampler, make_benchmark
+from .engine import (EngineConfig, make_engine, stack_epoch_batches,
+                     stack_pytrees)
+from .graph import (BENCHMARKS, GraphSAGE, NeighborSampler,
+                    build_partitioned_graph, make_benchmark)
 from .train.metrics import F1Report, f1_scores
-from .train.optim import AdamW, apply_updates
+from .train.optim import AdamW
 
 __all__ = ["EATConfig", "EATResult", "run_eat_distgnn"]
 
@@ -55,6 +78,8 @@ class EATConfig:
     flatten_tol: float = 0.02
     seed: int = 0
     centralized: bool = False             # 1 host, no partitioning (Table IV)
+    engine_mode: str = "auto"             # auto | spmd | stacked | sequential
+    use_pallas_agg: bool = True           # Pallas segment_agg on the eval path
 
 
 @dataclass
@@ -73,12 +98,14 @@ class EATResult:
     val_history: list[float] = field(default_factory=list)
     comm_grad_bytes: int = 0
     comm_halo_bytes: int = 0
+    engine_mode: str = "stacked"
 
     def summary(self) -> dict:
         return {
             "dataset": self.config.dataset,
             "method": self._label(),
             "parts": self.config.num_parts,
+            "engine": self.engine_mode,
             "micro_f1": round(self.f1.micro * 100, 2),
             "macro_f1": round(self.f1.macro * 100, 2),
             "weighted_f1": round(self.f1.weighted * 100, 2),
@@ -110,16 +137,7 @@ def _param_bytes(params) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
 
 
-def _eval_full(model, params, graph: CSRGraph, idx: np.ndarray,
-               edge_src, edge_dst) -> tuple[np.ndarray, np.ndarray]:
-    logits = model.apply_full(params, jnp.asarray(graph.features), edge_src,
-                              edge_dst, graph.num_nodes)
-    preds = np.asarray(jnp.argmax(logits, axis=-1))
-    return preds[idx], graph.labels[idx]
-
-
 def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
-    rng = np.random.default_rng([cfg.seed, 0xEA7])
     graph = make_benchmark(BENCHMARKS[cfg.dataset])
     n_parts = 1 if cfg.centralized else cfg.num_parts
 
@@ -139,20 +157,24 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         if verbose:
             print(f"partition[{cfg.partition_method}] {pres.stats.row()}")
 
-    # cross-partition edges = remote fetch volume per epoch (DistDGL analog)
-    src_all = graph.indices
-    dst_all = np.repeat(np.arange(graph.num_nodes), np.diff(graph.indptr))
-    cut_frac = float((parts[src_all] != parts[dst_all]).mean())
-
-    # ---------------- per-host samplers -----------------------------------
+    # ---------------- stacked shards + engine ------------------------------
+    pg = build_partitioned_graph(graph, parts, n_parts)
     model = GraphSAGE(feature_dim=graph.feature_dim, hidden_dim=cfg.hidden_dim,
                       num_classes=graph.num_classes)
     loss_fn = model.make_loss_fn(loss="focal" if cfg.use_focal else "ce")
-    neigh = NeighborSampler(graph, fanouts=cfg.fanouts, seed=cfg.seed)
+    opt = AdamW(lr=cfg.lr, grad_clip=5.0)
+    engine = make_engine(
+        model, loss_fn, opt, pg,
+        hp=GPHyperParams(lambda_prox=cfg.lambda_prox),
+        config=EngineConfig(mode=cfg.engine_mode,
+                            use_pallas_agg=cfg.use_pallas_agg))
+    if verbose:
+        print(f"engine[{engine.mode}] {pg.summary()}")
 
-    host_train = [graph.train_idx[parts[graph.train_idx] == p] for p in range(n_parts)]
-    host_val = [graph.val_idx[parts[graph.val_idx] == p] for p in range(n_parts)]
-    host_test = [graph.test_idx[parts[graph.test_idx] == p] for p in range(n_parts)]
+    # ---------------- per-host samplers -----------------------------------
+    neigh = NeighborSampler(graph, fanouts=cfg.fanouts, seed=cfg.seed)
+    host_train = [graph.train_idx[parts[graph.train_idx] == p]
+                  for p in range(n_parts)]
     samplers = [
         CBSampler(graph.indptr, graph.indices, graph.labels, host_train[p],
                   batch_size=cfg.batch_size,
@@ -161,26 +183,20 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         for p in range(n_parts)
     ]
 
-    # ---------------- jitted steps ----------------------------------------
-    opt = AdamW(lr=cfg.lr, grad_clip=5.0)
     params = model.init(cfg.seed)
     opt_state = opt.init(params)
     grad_bytes_per_sync = _param_bytes(params)
-
-    @jax.jit
-    def grad_step(p, batch):
-        return jax.value_and_grad(loss_fn)(p, batch)
-
-    @jax.jit
-    def apply_avg(p, o, grads):
-        updates, o2 = opt.update(grads, o, p)
-        return apply_updates(p, updates), o2
-
-    pstep = jax.jit(make_personalize_step(
-        loss_fn, opt, GPHyperParams(lambda_prox=cfg.lambda_prox)))
-
-    edge_src = jnp.asarray(graph.indices)
-    edge_dst = jnp.asarray(dst_all)
+    # cross-partition edges = remote fetch volume per epoch (DistDGL analog)
+    src_all = graph.indices
+    dst_all = np.repeat(np.arange(graph.num_nodes), np.diff(graph.indptr))
+    cut_frac = float((parts[src_all] != parts[dst_all]).mean())
+    # effective per-epoch visit fraction: CBS mini-epochs touch subset_fraction
+    # of the train nodes, the plain sampler touches all of them
+    eff_fraction = cfg.subset_fraction if cfg.use_cbs else 1.0
+    fetch_bytes_per_epoch = int(cut_frac * graph.num_edges * graph.feature_dim
+                                * 4 * eff_fraction)
+    halo_bytes_per_epoch = (2 * pg.halo_bytes_per_layer   # one per SAGE layer
+                            + fetch_bytes_per_epoch)
 
     def make_batch(nodes: np.ndarray) -> dict:
         # fixed shapes (pad + mask) so batches stack across hosts and the
@@ -213,39 +229,20 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     val_hist: list[float] = []
 
     while not ctrl.done and ctrl.phase == 0:
-        host_batches = [s.batches() for s in samplers]
-        iters = max(len(b) for b in host_batches)
-        host_time = np.zeros(n_parts)
-        ep_losses = []
-        for it in range(iters):
-            grads_acc = None
-            for p in range(n_parts):
-                hb = host_batches[p]
-                nodes = hb[it % len(hb)]
-                t0 = time.perf_counter()
-                batch = make_batch(nodes)
-                l, g = grad_step(params, batch)
-                jax.block_until_ready(l)
-                host_time[p] += time.perf_counter() - t0
-                ep_losses.append(float(l))
-                grads_acc = g if grads_acc is None else jax.tree.map(
-                    lambda a, b: a + b, grads_acc, g)
-            grads = jax.tree.map(lambda g_: g_ / n_parts, grads_acc)
-            params, opt_state = apply_avg(params, opt_state, grads)
-            comm_grad += grad_bytes_per_sync * n_parts
-        comm_halo += int(cut_frac * graph.num_edges * graph.feature_dim * 4
-                         * cfg.subset_fraction)
-        # synchronous epoch: everyone waits for the slowest host
+        batches, t_host, iters = stack_epoch_batches(samplers, make_batch,
+                                                     n_parts)
+        params, opt_state, losses, val_micro, t_dev = engine.phase0_epoch(
+            params, opt_state, batches)
+        comm_grad += grad_bytes_per_sync * n_parts * iters
+        comm_halo += halo_bytes_per_epoch
+        # synchronous epoch: everyone waits for the slowest host; the fused
+        # device step is attributed in equal 1/N shares
+        host_time = t_host + t_dev / n_parts
         sim_time += float(host_time.max())
         epoch_times.append(float(host_time.max()))
 
-        scores = []
-        for p in range(n_parts):
-            pred, lab = _eval_full(model, params, graph, host_val[p],
-                                   edge_src, edge_dst)
-            scores.append(f1_scores(pred, lab, graph.num_classes).micro)
-        mean_loss = float(np.mean(ep_losses))
-        mean_val = float(np.mean(scores))
+        mean_loss = float(np.asarray(losses).mean())
+        mean_val = float(np.asarray(val_micro).mean())
         loss_hist.append(mean_loss)
         val_hist.append(mean_val)
         if ctrl.record_phase0(mean_loss, mean_val):
@@ -270,38 +267,18 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         host_elapsed = np.zeros(n_parts)
         while not ctrl.done:
             active_np = ctrl.active_partitions
-            active = jnp.asarray(active_np)
-            host_batches = [s.batches() for s in samplers]
-            iters = max(len(b) for b in host_batches)
-            t_host = np.zeros(n_parts)
-            losses_ep = np.zeros(n_parts)
-            for it in range(iters):
-                stacked = [None] * n_parts
-                for p in range(n_parts):
-                    hb = host_batches[p]
-                    nodes = hb[it % len(hb)]
-                    t0 = time.perf_counter()
-                    stacked[p] = make_batch(nodes)
-                    t_host[p] += time.perf_counter() - t0
-                batch_p = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
-                t0 = time.perf_counter()
-                pparams, popt, losses = pstep(pparams, popt, batch_p,
-                                              global_params, active)
-                jax.block_until_ready(losses)
-                # vmapped step: attribute 1/n of device time to each host
-                t_host += (time.perf_counter() - t0) / n_parts
-                losses_ep = np.asarray(losses)
-            host_elapsed += np.where(active_np, t_host, 0.0)
-            scores = np.zeros(n_parts)
-            for p in range(n_parts):
-                pp = jax.tree.map(lambda x: x[p], pparams)
-                pred, lab = _eval_full(model, pp, graph, host_val[p],
-                                       edge_src, edge_dst)
-                scores[p] = f1_scores(pred, lab, graph.num_classes).micro
+            batches, t_host, iters = stack_epoch_batches(samplers, make_batch,
+                                                         n_parts)
+            pparams, popt, losses, val_micro, t_dev = engine.phase1_epoch(
+                pparams, popt, batches, global_params,
+                jnp.asarray(active_np))
+            comm_halo += halo_bytes_per_epoch
+            host_elapsed += np.where(active_np, t_host + t_dev / n_parts, 0.0)
+            scores = np.asarray(val_micro)
             is_best = ctrl.record_phase1(scores)
             for p in np.flatnonzero(is_best):
                 best_personal[p] = jax.tree.map(lambda x: x[p], pparams)
-            loss_hist.append(float(losses_ep.mean()))
+            loss_hist.append(float(np.asarray(losses)[-1].mean()))
             val_hist.append(float(scores.mean()))
             if verbose:
                 print(f"[phase-1] epoch {ctrl.epoch:3d} "
@@ -309,15 +286,20 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                       f"active {int(active_np.sum())}/{n_parts}")
         # async phase: distributed time = slowest host's own cumulative time
         sim_time += float(host_elapsed.max())
-        final_models = best_personal
+        final_stacked = stack_pytrees(best_personal)
     else:
-        final_models = [best_global] * n_parts
+        final_stacked = broadcast_to_partitions(best_global, n_parts)
 
     # ---------------- final evaluation -------------------------------------
+    _, preds = engine.evaluate(final_stacked, "test",
+                               per_partition_params=True)
+    preds = np.asarray(preds)
+    test_mask = np.asarray(pg.test_mask)
+    labels = np.asarray(pg.labels)
     all_preds, all_labels, per_micro = [], [], np.zeros(n_parts)
     for p in range(n_parts):
-        pred, lab = _eval_full(model, final_models[p], graph, host_test[p],
-                               edge_src, edge_dst)
+        m = test_mask[p]
+        pred, lab = preds[p][m], labels[p][m]
         all_preds.append(pred)
         all_labels.append(lab)
         per_micro[p] = f1_scores(pred, lab, graph.num_classes).micro
@@ -332,4 +314,5 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         epochs_run=ctrl.epoch, personalize_start_epoch=personalize_start,
         loss_history=loss_hist, val_history=val_hist,
         comm_grad_bytes=comm_grad, comm_halo_bytes=comm_halo,
+        engine_mode=engine.mode,
     )

@@ -1,0 +1,316 @@
+"""SPMD engine parity harness (the tentpole's self-verification).
+
+1. float64 bit-for-bit: the fused SPMD engine (stacked vmap mode) reproduces
+   the sequential per-partition reference EXACTLY — losses, updated params,
+   per-partition validation micro-F1 and test predictions — across
+   seeds × {ew, metis, random} × {cbs, uniform}.  Runs in a subprocess so
+   ``jax_enable_x64`` cannot leak into other tests.
+2. shard_map mode: with 4 forced host devices the mesh engine matches the
+   stacked engine to collective-reduction rounding (<= a few f32 ulps).
+3. Pallas on the hot path: the distributed eval forward demonstrably stages
+   ``segment_agg`` (trace-time call counter) and agrees with the jnp
+   segment-op reference.
+4. segment_agg property sweep: Pallas vs ref over ragged degree
+   distributions — power-law, isolated nodes, single giant hub.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUBPROC_ENV = {"PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+               "PATH": "/usr/bin:/bin", "HOME": os.path.expanduser("~")}
+
+# --------------------------------------------------------------------------
+# shared harness body (runs inside the test process AND inside subprocesses)
+# --------------------------------------------------------------------------
+
+HARNESS = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import partition_graph, GPHyperParams, broadcast_to_partitions
+from repro.core.sampler import CBSampler
+from repro.engine import (EngineConfig, SPMDEngine, SequentialReference,
+                          stack_epoch_batches)
+from repro.graph import (BENCHMARKS, GraphSAGE, NeighborSampler,
+                         build_partitioned_graph, make_benchmark)
+from repro.train.optim import AdamW
+
+P = 4
+BATCH = 32
+
+def build_case(method, seed, use_cbs, dtype):
+    g = make_benchmark(BENCHMARKS["tiny"])
+    r = partition_graph(g.indptr, g.indices, g.features, g.labels, P,
+                        method=method, seed=seed)
+    pg = build_partitioned_graph(g, r.parts, P)
+    model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                      num_classes=g.num_classes)
+    loss_fn = model.make_loss_fn()
+    opt = AdamW(lr=3e-3, grad_clip=5.0)
+    neigh = NeighborSampler(g, fanouts=(3, 3), seed=seed)
+    host_train = [g.train_idx[r.parts[g.train_idx] == p] for p in range(P)]
+    samplers = [CBSampler(g.indptr, g.indices, g.labels, host_train[p],
+                          batch_size=BATCH,
+                          subset_fraction=0.25 if use_cbs else 1.0,
+                          class_balanced=use_cbs, seed=seed + p)
+                for p in range(P)]
+    feats = np.asarray(g.features, dtype)
+
+    def make_batch(nodes):
+        k = len(nodes)
+        if k < BATCH:
+            nodes = np.concatenate([nodes, np.zeros(BATCH - k, nodes.dtype)])
+        mask = np.zeros(BATCH, dtype)
+        mask[:k] = 1
+        b = neigh.sample(nodes)
+        x_t, x_1, x_2 = b.feature_views(feats)
+        return {"x_t": jnp.asarray(x_t), "x_1": jnp.asarray(x_1),
+                "x_2": jnp.asarray(x_2),
+                "labels": jnp.asarray(g.labels[nodes]),
+                "mask": jnp.asarray(mask)}
+
+    return g, pg, model, loss_fn, opt, samplers, make_batch
+
+
+def tree_maxdiff(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def run_pair(engA, engB, model, opt, samplers, make_batch, seed, dtype):
+    '''One phase-0 epoch + one phase-1 epoch (with a frozen partition) +
+    test eval through both engines on IDENTICAL batches; returns max diffs.'''
+    params = jax.tree.map(lambda x: jnp.asarray(x, dtype), model.init(seed))
+    opt_state = opt.init(params)
+    b0, _, _ = stack_epoch_batches(samplers, make_batch, P)
+    pA, oA, lA, vA, _ = engA.phase0_epoch(params, opt_state, b0)
+    pB, oB, lB, vB, _ = engB.phase0_epoch(params, opt_state, b0)
+    d = {"p0_loss": float(np.abs(np.asarray(lA) - np.asarray(lB)).max()),
+         "p0_val": float(np.abs(np.asarray(vA) - np.asarray(vB)).max()),
+         "p0_params": tree_maxdiff(pA, pB)}
+    pp = broadcast_to_partitions(pA, P)
+    po = jax.vmap(opt.init)(pp)
+    active = np.ones(P, bool)
+    active[seed % P] = False          # one frozen host: gate parity too
+    b1, _, _ = stack_epoch_batches(samplers, make_batch, P)
+    ppA, poA, l1A, v1A, _ = engA.phase1_epoch(pp, po, b1, pA, jnp.asarray(active))
+    ppB, poB, l1B, v1B, _ = engB.phase1_epoch(pp, po, b1, pB, jnp.asarray(active))
+    d.update({"p1_loss": float(np.abs(np.asarray(l1A) - np.asarray(l1B)).max()),
+              "p1_val": float(np.abs(np.asarray(v1A) - np.asarray(v1B)).max()),
+              "p1_params": tree_maxdiff(ppA, ppB)})
+    mA, prA = engA.evaluate(ppA, "test")
+    mB, prB = engB.evaluate(ppB, "test")
+    d["test_micro"] = float(np.abs(np.asarray(mA) - np.asarray(mB)).max())
+    d["test_pred_mismatch"] = int((np.asarray(prA) != np.asarray(prB)).sum())
+    return d
+"""
+
+FP64_SCRIPT = (
+    "import jax\n"
+    "jax.config.update('jax_enable_x64', True)\n"
+    + HARNESS
+    + r"""
+import itertools, json
+failures = {}
+for method, seed, use_cbs in itertools.product(
+        ("ew", "metis", "random"), (0, 1), (True, False)):
+    cfg = EngineConfig(mode="stacked", use_pallas_agg=False,
+                       dtype=jnp.float64)
+    g, pg, model, loss_fn, opt, samplers, make_batch = build_case(
+        method, seed, use_cbs, np.float64)
+    eng = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(), cfg)
+    seq = SequentialReference(model, loss_fn, opt, pg, GPHyperParams(), cfg)
+    d = run_pair(eng, seq, model, opt, samplers, make_batch, seed, jnp.float64)
+    if any(v != 0 for v in d.values()):
+        failures[f"{method}/seed{seed}/cbs={use_cbs}"] = d
+print("FAILURES", json.dumps(failures))
+"""
+)
+
+
+@pytest.mark.slow
+def test_engine_matches_sequential_bitforbit_fp64():
+    """Fused SPMD engine == sequential reference, bit-for-bit in float64,
+    across partition methods, seeds and sampler regimes."""
+    # 12 configs × (compile + run); generous timeout — a loaded host can be
+    # an order of magnitude slower than the ~500 s unloaded wall time
+    res = subprocess.run([sys.executable, "-c", FP64_SCRIPT],
+                         capture_output=True, text=True, timeout=5400,
+                         env=SUBPROC_ENV)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("FAILURES")][0]
+    assert line == "FAILURES {}", line
+
+
+def test_engine_matches_sequential_fp64_smoke():
+    """Single-config fast variant of the bit-for-bit check (tier-1: the full
+    matrix runs under -m slow)."""
+    script = (
+        "import jax\n"
+        "jax.config.update('jax_enable_x64', True)\n"
+        + HARNESS
+        + r"""
+import json
+cfg = EngineConfig(mode="stacked", use_pallas_agg=False, dtype=jnp.float64)
+g, pg, model, loss_fn, opt, samplers, make_batch = build_case(
+    "ew", 0, True, np.float64)
+eng = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(), cfg)
+seq = SequentialReference(model, loss_fn, opt, pg, GPHyperParams(), cfg)
+d = run_pair(eng, seq, model, opt, samplers, make_batch, 0, jnp.float64)
+print("DIFFS", json.dumps(d))
+"""
+    )
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1800,
+                         env=SUBPROC_ENV)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("DIFFS")][0]
+    import json
+
+    diffs = json.loads(line[len("DIFFS "):])
+    assert all(v == 0 for v in diffs.values()), diffs
+
+
+SPMD_SCRIPT = (
+    "import os\n"
+    "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'\n"
+    + HARNESS
+    + r"""
+import json
+g, pg, model, loss_fn, opt, samplers, make_batch = build_case(
+    "ew", 0, True, np.float32)
+eng = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                 EngineConfig(mode="spmd", use_pallas_agg=True))
+stk = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                 EngineConfig(mode="stacked", use_pallas_agg=True))
+assert eng.mode == "spmd", eng.mode
+d = run_pair(eng, stk, model, opt, samplers, make_batch, 0, jnp.float32)
+print("DIFFS", json.dumps(d))
+"""
+)
+
+
+def test_spmd_shard_map_matches_stacked():
+    """shard_map over a real 4-device partition mesh == single-device
+    stacked vmap, up to collective-reduction rounding (few f32 ulps)."""
+    res = subprocess.run([sys.executable, "-c", SPMD_SCRIPT],
+                         capture_output=True, text=True, timeout=1800,
+                         env=SUBPROC_ENV)
+    assert res.returncode == 0, res.stderr[-3000:]
+    import json
+
+    line = [l for l in res.stdout.splitlines() if l.startswith("DIFFS")][0]
+    d = json.loads(line[len("DIFFS "):])
+    # pmean (tree-wise collective) vs stacked jnp.sum/P, and per-device vs
+    # vmapped batch reductions, may differ in the last ulp; everything
+    # downstream must stay within tight float32 slack.  Micro-F1/argmax get
+    # a hair of slack too: an ulp-level param drift can legitimately flip
+    # the argmax of a near-tied logit pair on a handful of nodes.
+    assert d["p0_loss"] <= 1e-6 and d["p1_loss"] <= 1e-5, d
+    assert d["p0_params"] <= 1e-6 and d["p1_params"] <= 1e-5, d
+    assert d["p0_val"] <= 5e-3 and d["p1_val"] <= 5e-3, d
+    assert d["test_micro"] <= 5e-3 and d["test_pred_mismatch"] <= 3, d
+
+
+# --------------------------------------------------------------------------
+# Pallas segment_agg on the hot path
+# --------------------------------------------------------------------------
+
+def _build_f32_engines(use_pallas):
+    from repro.core import partition_graph, GPHyperParams
+    from repro.engine import EngineConfig, SPMDEngine
+    from repro.graph import (BENCHMARKS, GraphSAGE, build_partitioned_graph,
+                             make_benchmark)
+    from repro.train.optim import AdamW
+
+    g = make_benchmark(BENCHMARKS["tiny"])
+    r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                        method="ew", seed=0)
+    pg = build_partitioned_graph(g, r.parts, 4)
+    model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                      num_classes=g.num_classes)
+    opt = AdamW(lr=1e-3)
+    eng = SPMDEngine(model, model.make_loss_fn(), opt, pg, GPHyperParams(),
+                     EngineConfig(mode="stacked", use_pallas_agg=use_pallas))
+    return model, eng
+
+
+def test_distributed_forward_calls_pallas_segment_agg():
+    """The engine's eval forward must stage the Pallas kernel (trace-time
+    call counter) and agree with the jnp segment-op reference engine."""
+    from repro.core.gp.trainer import broadcast_to_partitions
+    from repro.kernels import segment_agg as sa
+
+    model, eng_pal = _build_f32_engines(use_pallas=True)
+    _, eng_ref = _build_f32_engines(use_pallas=False)
+    params = broadcast_to_partitions(model.init(0), 4)
+
+    before = sa.pallas_call_count()
+    micro_pal, preds_pal = eng_pal.evaluate(params, "val")
+    after = sa.pallas_call_count()
+    assert after > before, "segment_agg_pallas was never staged by the engine"
+
+    micro_ref, preds_ref = eng_ref.evaluate(params, "val")
+    np.testing.assert_allclose(np.asarray(micro_pal), np.asarray(micro_ref),
+                               atol=1e-6)
+    agree = (np.asarray(preds_pal) == np.asarray(preds_ref)).mean()
+    assert agree > 0.999, f"pallas/ref argmax agreement only {agree}"
+
+
+# --------------------------------------------------------------------------
+# segment_agg ragged-degree property sweep (Pallas kernel vs ref oracle)
+# --------------------------------------------------------------------------
+
+def _csr_from_degrees(deg, n, rng):
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    indices = rng.integers(0, n, int(indptr[-1]))
+    return indptr, indices.astype(np.int64)
+
+
+def _degree_profile(kind, n, rng):
+    if kind == "powerlaw":
+        deg = np.minimum((1.0 / rng.power(2.0, n) - 1).astype(np.int64), 200)
+        return np.maximum(deg, 0)
+    if kind == "isolated":
+        deg = rng.integers(0, 6, n)
+        deg[rng.random(n) < 0.5] = 0          # half the graph isolated
+        return deg
+    if kind == "giant_hub":
+        deg = rng.integers(0, 4, n)
+        deg[int(rng.integers(0, n))] = 5000   # one hub spanning many blocks
+        return deg
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("kind", ["powerlaw", "isolated", "giant_hub"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("mean", [True, False])
+def test_segment_agg_ragged_degree_sweep(kind, seed, mean):
+    """Pallas blocked segment aggregation == jnp oracle on adversarial
+    degree distributions (ragged blocks, empty rows, single giant hub)."""
+    from repro.kernels import ops, ref
+
+    import zlib
+
+    rng = np.random.default_rng([seed, zlib.crc32(kind.encode())])
+    n = 300
+    deg = _degree_profile(kind, n, rng)
+    indptr, indices = _csr_from_degrees(deg, n, rng)
+    x = jnp.asarray(rng.normal(0, 1, (n, 24)).astype(np.float32))
+    agg = ops.make_segment_agg(indptr, indices, mean=mean)
+    got = np.asarray(agg(x))
+    src = jnp.asarray(indices)
+    dst = jnp.asarray(np.repeat(np.arange(n), np.diff(indptr)))
+    want = np.asarray(ref.segment_agg_ref(x, src, dst, n, mean=mean))
+    # hub rows sum thousands of values: scale tolerance with degree
+    tol = 1e-4 * max(1.0, float(deg.max()) ** 0.5) if not mean else 2e-4
+    np.testing.assert_allclose(got, want, atol=tol, rtol=2e-4)
+    if mean:
+        assert np.abs(got[deg == 0]).max() == 0.0  # empty rows stay zero

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: deterministic random-sampling shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import partition_graph
 from repro.graph import (BENCHMARKS, GraphSAGE, NeighborSampler,
@@ -131,16 +134,17 @@ model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=32, num_classes=g.num_cl
 params = model.init(0)
 r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4, method="ew", seed=0)
 pg = build_partitioned_graph(g, r.parts, 4)
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+from repro.engine.compat import shard_map_compat
+mesh = make_mesh_compat((4,), ("data",))
 fwd = make_distributed_forward(model, {"max_nodes": pg.max_nodes}, axis_name="data")
 shard = dict(features=pg.features, send_idx=pg.send_idx, send_mask=pg.send_mask,
              recv_pos=pg.recv_pos, edge_src=pg.edge_src, edge_dst=pg.edge_dst,
              edge_mask=pg.edge_mask)
 specs = {k: P("data", *([None]*(v.ndim-1))) for k, v in shard.items()}
-smfwd = jax.jit(jax.shard_map(
+smfwd = jax.jit(shard_map_compat(
     lambda prm, sh: fwd(prm, jax.tree.map(lambda x: x[0], sh)),
-    mesh=mesh, in_specs=(P(), specs), out_specs=P("data", None),
-    check_vma=False))
+    mesh, in_specs=(P(), specs), out_specs=P("data", None)))
 dl = np.asarray(smfwd(params, shard)).reshape(4, pg.max_nodes, g.num_classes)
 src = g.indices; dst = np.repeat(np.arange(g.num_nodes), np.diff(g.indptr))
 full = np.asarray(model.apply_full(params, jnp.asarray(g.features),

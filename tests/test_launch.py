@@ -10,11 +10,10 @@ import pytest
 
 
 def test_sanitize_spec_rules():
-    import jax
     from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh_compat
     from repro.launch.steps import sanitize_spec
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    make_mesh_compat((1,), ("model",))  # mesh construction is version-portable
 
     class FakeMesh:
         shape = {"data": 4, "model": 8, "pod": 2}
@@ -36,14 +35,14 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
-from jax.sharding import AxisType
 from repro.configs import get_config, SHAPES, InputShape
+from repro.launch.mesh import make_mesh_compat
 from repro.launch.steps import build_step
 
 def small_mesh(multi_pod=False):
     shape = (2, 2, 2) if multi_pod else (4, 2)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,)*len(axes))
+    return make_mesh_compat(shape, axes)
 
 results = {}
 cfg = get_config("llama3.2-1b").reduced()
@@ -54,11 +53,16 @@ shapes = {
 }
 for mp in (False, True):
     mesh = small_mesh(mp)
-    with jax.set_mesh(mesh):
+    # the ambient mesh context lets with_sharding_constraint resolve bare
+    # PartitionSpecs inside the model; `with mesh:` is the 0.4.x spelling of
+    # the newer jax.set_mesh
+    with mesh:
         for name, shape in shapes.items():
             built = build_step(cfg, shape, mesh)
             compiled = built.lower().compile()
             cost = compiled.cost_analysis()
+            if isinstance(cost, list):  # 0.4.x: one dict per computation
+                cost = cost[0]
             results[f"{name}@{'2pod' if mp else '1pod'}"] = cost["flops"] > 0
         # phase-1 personalized step lowers too (the GP feature, distributed).
         # KNOWN LIMITATION: on the CPU backend, XLA's SPMD partitioner
