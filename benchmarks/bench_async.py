@@ -1,0 +1,85 @@
+"""Async personalization benchmark — the perf trajectory for PR 2.
+
+Compares phase-1 (personalization) between the lockstep baseline (host CBS
+sampling + full-epoch `active` gating) and the async path (on-device CBS
+draw + per-partition iteration budgets + masked variable-length scan) on
+`products-s` at 4 and 8 partitions.
+
+Emits ``results/BENCH_async_personalization.json`` with, per config:
+epoch time (phase-0 mean and phase-1 per-epoch), phase-1 total step time
+(the slowest host's cumulative personalization time — the paper's async
+timing semantics), epochs-to-convergence, and final micro-F1.
+
+    PYTHONPATH=src python benchmarks/bench_async.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from common import cached_run, emit  # noqa: E402
+
+from repro.pipeline import EATConfig  # noqa: E402
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_async_personalization.json")
+
+# modest single-CPU scale; a hard 25% phase split gives sync and async the
+# IDENTICAL phase-0, so the comparison isolates the phase-1 mechanics.
+# Eval runs the jnp segment-op path: on a CPU container the Pallas kernel
+# is interpret-mode (slow python emulation) and eval cost is excluded from
+# the step-time metrics being compared anyway.
+BENCH_KW = dict(dataset="products-s", partition_method="ew", use_cbs=True,
+                use_gp=True, max_epochs=20, hidden_dim=64, batch_size=256,
+                fanouts=(5, 5), lr=3e-3, phase0_fraction=0.25, seed=0,
+                use_pallas_agg=False)
+
+
+def run_config(parts: int, async_p: bool) -> dict:
+    cfg = EATConfig(num_parts=parts, async_personalize=async_p, **BENCH_KW)
+    row = cached_run(cfg, verbose=True)
+    keep = {k: row[k] for k in
+            ("dataset", "method", "parts", "engine", "micro_f1", "macro_f1",
+             "epoch_time_s", "epochs", "personalize_start",
+             "phase1_time_s", "phase1_epochs", "train_time_s")}
+    keep["mode"] = "async" if async_p else "sync"
+    keep["phase1_epoch_time_s"] = (
+        round(row["phase1_time_s"] / max(1, row["phase1_epochs"]), 4))
+    return keep
+
+
+def main() -> int:
+    rows = []
+    for parts in (4, 8):
+        for async_p in (False, True):
+            r = run_config(parts, async_p)
+            rows.append(r)
+            emit("bench_async", r)
+
+    out = {"dataset": "products-s", "configs": rows}
+    for parts in (4, 8):
+        sync = next(r for r in rows
+                    if r["parts"] == parts and r["mode"] == "sync")
+        asyn = next(r for r in rows
+                    if r["parts"] == parts and r["mode"] == "async")
+        out[f"phase1_speedup_{parts}p"] = round(
+            sync["phase1_time_s"] / max(1e-9, asyn["phase1_time_s"]), 3)
+        out[f"async_below_sync_{parts}p"] = (
+            asyn["phase1_time_s"] < sync["phase1_time_s"])
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))
+    print(f"wrote {os.path.normpath(OUT_PATH)}")
+    if not out["async_below_sync_8p"]:
+        print("WARNING: async phase-1 not below lockstep at 8 partitions")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

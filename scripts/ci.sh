@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 CI: fast deterministic suite, then a pass/fail delta against the
-# checked-in seed baseline (tests/seed_baseline.txt).
+# Tier-1 CI: fast deterministic suite (including the fixed-seed statistical
+# tier for the on-device CBS sampler, tests/test_cbs_device.py), then a
+# pass/fail delta against the checked-in seed baseline
+# (tests/seed_baseline.txt), then a runtime gate: any slow-unmarked test
+# exceeding 30 s that is not grandfathered in tests/tier1_slowlist.txt
+# fails the build.
 #
-#   scripts/ci.sh          tier-1 (-m "not slow") + baseline delta
+#   scripts/ci.sh          tier-1 (-m "not slow") + baseline delta + 30s gate
 #   scripts/ci.sh slow     the -m slow stage (kernel sweeps, multi-device
 #                          subprocess compiles, the full fp64 parity matrix)
 #   scripts/ci.sh all      both stages
@@ -15,7 +19,7 @@ if [ "$mode" = "slow" ]; then
     exec python -m pytest -m slow -q
 fi
 
-out=$(python -m pytest -m "not slow" -q 2>&1)
+out=$(python -m pytest -m "not slow" -q --durations=0 2>&1)
 pytest_status=$?
 echo "$out" | tail -25
 
@@ -54,6 +58,33 @@ if [ "$passed" -lt "$bpass" ]; then
     exit 1
 fi
 echo "OK: no regression vs seed baseline"
+
+# ---- 30 s runtime gate -----------------------------------------------------
+# A tier-1 test that needs > 30 s (call or fixture setup) must either carry
+# the `slow` marker or be grandfathered in tests/tier1_slowlist.txt.
+slowlist=tests/tier1_slowlist.txt
+offenders=$(echo "$out" | awk '
+    $1 ~ /^[0-9]+(\.[0-9]+)?s$/ && ($2 == "call" || $2 == "setup") {
+        sec = substr($1, 1, length($1) - 1) + 0
+        if (sec > 30) print sec "s " $3
+    }')
+new_offenders=""
+while IFS= read -r line; do
+    [ -z "$line" ] && continue
+    id=${line#* }
+    if ! grep -qxF "$id" "$slowlist" 2>/dev/null; then
+        new_offenders="$new_offenders$line"$'\n'
+    fi
+done <<EOF
+$offenders
+EOF
+if [ -n "$new_offenders" ]; then
+    echo "REGRESSION: slow-unmarked tier-1 tests exceeding 30 s"
+    echo "(mark them @pytest.mark.slow or add to $slowlist):"
+    printf '%s' "$new_offenders"
+    exit 1
+fi
+echo "OK: no new tier-1 test exceeds 30 s"
 
 if [ "$mode" = "all" ]; then
     python -m pytest -m slow -q || exit 1

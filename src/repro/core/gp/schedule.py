@@ -131,6 +131,29 @@ class GPController:
         """Bool mask of partitions still training in phase-1 ('async' stop)."""
         return np.array([not s.stopped for s in self.phase1_stoppers])
 
+    def phase1_budgets(self, natural_iters, taper: bool = False) -> np.ndarray:
+        """Per-partition iteration budgets for the next fused phase-1 step —
+        the API the engine's masked variable-length scan consumes.
+
+        ``natural_iters`` is each partition's own mini-epoch batch count (a
+        scalar broadcasts).  A partition whose early stop fired gets budget
+        0 (its params/opt state ride through the step bitwise untouched);
+        with ``taper=True`` a partition that is burning patience (its own
+        validation micro-F1 stalling) linearly sheds iterations first, so
+        the fused step's trip count — max over budgets — shrinks as hosts
+        approach their stop instead of falling off a cliff.
+        """
+        nat = np.broadcast_to(
+            np.asarray(natural_iters, dtype=np.int64),
+            (self.num_partitions,)).astype(np.int64).copy()
+        if taper:
+            for i, s in enumerate(self.phase1_stoppers):
+                # nat == 0 marks an empty train set — never promote it to 1
+                if not s.stopped and s.bad_epochs > 0 and nat[i] > 0:
+                    frac = 1.0 - s.bad_epochs / (2.0 * (s.patience + 1))
+                    nat[i] = max(1, int(round(nat[i] * frac)))
+        return np.where(self.active_partitions, nat, 0).astype(np.int32)
+
     @property
     def done(self) -> bool:
         if self.epoch >= self.config.max_epochs:

@@ -96,9 +96,11 @@ def make_personalize_partition_step(
 
         loss, grads = jax.value_and_grad(total_loss)(params)
         updates, new_opt_state = optimizer.update(grads, opt_state, params)
-        gate = active.astype(jnp.float32)
+        # select, don't multiply-by-gate: an inactive partition's params must
+        # come back BITWISE unchanged (p + 0.0 flips the sign of -0.0), which
+        # is what lets a zero-budget fused step be a true no-op
         new_params = jax.tree.map(
-            lambda p, u: p + u * gate.astype(u.dtype), params, updates
+            lambda p, u: jnp.where(active, p + u, p), params, updates
         )
         sel = lambda new, old: jnp.where(active, new, old)
         kept_opt_state = jax.tree.map(sel, new_opt_state, opt_state)

@@ -1,3 +1,14 @@
-from .cbs import CBSampler, cbs_probabilities
+from .cbs import (CBSampler, cbs_probabilities, host_draw_count,
+                  reset_host_draw_count)
+from .cbs_device import (DeviceEpochSampler, build_device_epoch_sampler,
+                         cbs_probabilities_device, device_fanout,
+                         device_trace_count, gumbel_subset,
+                         reset_device_trace_count)
 
-__all__ = ["CBSampler", "cbs_probabilities"]
+__all__ = [
+    "CBSampler", "cbs_probabilities", "host_draw_count",
+    "reset_host_draw_count",
+    "DeviceEpochSampler", "build_device_epoch_sampler",
+    "cbs_probabilities_device", "device_fanout", "device_trace_count",
+    "gumbel_subset", "reset_device_trace_count",
+]

@@ -23,7 +23,22 @@ from dataclasses import dataclass, field
 import numpy as np
 import scipy.sparse as sp
 
-__all__ = ["cbs_probabilities", "CBSampler"]
+__all__ = ["cbs_probabilities", "CBSampler", "host_draw_count",
+           "reset_host_draw_count"]
+
+_HOST_DRAWS = 0
+
+
+def host_draw_count() -> int:
+    """How many host-side NumPy mini-epoch draws have run.  The async
+    personalization path must leave this untouched (the device sampler owns
+    the mini-epoch draw there) — tests/test_cbs_device.py asserts it."""
+    return _HOST_DRAWS
+
+
+def reset_host_draw_count() -> None:
+    global _HOST_DRAWS
+    _HOST_DRAWS = 0
 
 
 def cbs_probabilities(
@@ -97,6 +112,8 @@ class CBSampler:
         """Draw the mini-epoch node SUBSET — a weighted draw without
         replacement over Eq. 3 (the paper samples a subset; duplicates would
         inflate variance)."""
+        global _HOST_DRAWS
+        _HOST_DRAWS += 1
         k = min(self.mini_epoch_size, len(self.train_idx))
         if k == len(self.train_idx) and not self.class_balanced:
             return self._rng.permutation(self.train_idx)

@@ -1,0 +1,257 @@
+"""Device-side CBS — Eq. 3 probabilities and the mini-epoch draw as jax ops.
+
+``core/sampler/cbs.py`` keeps the paper-faithful host NumPy sampler
+(DistDGL's CPU workers); this module ports the SAME math to jax PRNG so the
+whole mini-epoch — subset resample, batch shuffle, fanout neighbour
+sampling, feature gather — stages onto the fused epoch trace.  That removes
+the host round-trip through ``stack_epoch_batches`` that otherwise bounds
+every personalization epoch (the CPU-sampling bottleneck FastSample and
+DistDGL's hybrid design identify as the dominant cost).
+
+Pieces:
+
+  · :func:`cbs_probabilities_device` — Eq. 3 over ``train_idx`` in pure jnp,
+    matching the NumPy reference to ~1e-12 under x64 (statistically tested
+    in ``tests/test_cbs_device.py``).
+  · :func:`gumbel_subset` — weighted WITHOUT-replacement subset draw via the
+    Gumbel top-k trick (the first k slots of the Gumbel-perturbed ranking
+    are a sequential weighted sample, exactly the host
+    ``CBSampler.sample_mini_epoch`` distribution).
+  · :func:`device_fanout` — uniform with-replacement fanout sampling over
+    the global CSR (the jax twin of ``NeighborSampler._sample_neighbors``,
+    modular pick + self-loop for isolated nodes).
+  · :class:`DeviceEpochSampler` — stacked per-partition state (padded train
+    sets, log Eq. 3 vectors, the global CSR + features) plus the on-trace
+    per-partition epoch program the engine vmaps / shard_maps over.
+
+A trace-time counter (:func:`device_trace_count`) mirrors the Pallas
+kernel counter so tests can assert the draw is actually staged on device,
+and :func:`repro.core.sampler.cbs.host_draw_count` proves the host path is
+NOT hit on the async mini-epoch path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "cbs_probabilities_device",
+    "eq3_column_norms",
+    "gumbel_subset",
+    "device_fanout",
+    "DeviceEpochSampler",
+    "build_device_epoch_sampler",
+    "device_trace_count",
+    "reset_device_trace_count",
+]
+
+_DEVICE_TRACES = 0
+
+
+def device_trace_count() -> int:
+    """How many times the on-device mini-epoch draw has been STAGED (traced).
+
+    Like ``kernels.segment_agg.pallas_call_count``: increments at trace time,
+    so a compiled-and-cached epoch step counts once, and a host-side fallback
+    counts zero."""
+    return _DEVICE_TRACES
+
+
+def reset_device_trace_count() -> None:
+    global _DEVICE_TRACES
+    _DEVICE_TRACES = 0
+
+
+def eq3_column_norms(indptr, indices) -> jnp.ndarray:
+    """``||Â(:,v)||² = d_v · Σ_{u∈N(v)} 1/d_u`` for every node — the
+    graph-level (train-set-independent) half of Eq. 3, computed once and
+    shared across partitions."""
+    indptr = jnp.asarray(indptr, jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
+    indices = jnp.asarray(indices)
+    n = indptr.shape[0] - 1
+    counts = jnp.diff(indptr)
+    deg = jnp.maximum(counts.astype(jnp.float64 if jax.config.jax_enable_x64
+                                    else jnp.float32), 1.0)
+    d_isqrt = 1.0 / jnp.sqrt(deg)
+    d_sqrt = jnp.sqrt(deg)
+    src = indices
+    # dst[e] = owning row of CSR slot e (the jnp spelling of np.repeat)
+    dst = jnp.searchsorted(indptr, jnp.arange(src.shape[0]), side="right") - 1
+    col_sq = jnp.zeros(n, deg.dtype).at[dst].add(d_isqrt[src] ** 2)
+    return col_sq * d_sqrt**2
+
+
+def cbs_probabilities_device(indptr, indices, labels, train_idx,
+                             col_sq=None) -> jnp.ndarray:
+    """Eq. 3 sampling probabilities over ``train_idx`` in pure jnp.
+
+    Same construction as :func:`repro.core.sampler.cbs.cbs_probabilities`:
+    ``P(v) ∝ ||Â(:,v)||² / CF(class[v])``.  Runs eagerly at setup time
+    (class count is data-dependent); the repeated per-epoch work is the draw,
+    not this.  Pass a precomputed :func:`eq3_column_norms` as ``col_sq`` to
+    amortise the O(E) graph pass across partitions.  Under
+    ``jax_enable_x64`` it matches the NumPy float64 reference to ~1e-12
+    (asserted statistically in tests/test_cbs_device.py).
+    """
+    if col_sq is None:
+        col_sq = eq3_column_norms(indptr, indices)
+    labels = jnp.asarray(labels)
+    train_idx = jnp.asarray(train_idx)
+    train_labels = labels[train_idx]
+    num_classes = (int(train_labels.max()) + 1) if train_labels.size else 1
+    cf = jnp.zeros(num_classes, col_sq.dtype).at[train_labels].add(1.0)
+    p = col_sq[train_idx] / jnp.maximum(cf[train_labels], 1.0)
+    s = p.sum()
+    uniform = jnp.full(train_idx.shape[0], 1.0 / max(1, train_idx.shape[0]),
+                       col_sq.dtype)
+    return jnp.where(s > 0, p / jnp.where(s > 0, s, 1.0), uniform)
+
+
+def gumbel_subset(key, logp: jnp.ndarray, subset_size: int) -> jnp.ndarray:
+    """Positions of a weighted WITHOUT-replacement draw of ``subset_size``
+    slots from ``exp(logp)`` (Gumbel top-k).  ``-inf`` entries (padding /
+    zero-probability nodes) sort last and are never picked while real support
+    remains."""
+    g = jax.random.gumbel(key, logp.shape, jnp.float32)
+    order = jnp.argsort(-(logp.astype(jnp.float32) + g))
+    return order[:subset_size]
+
+
+def device_fanout(key, nodes: jnp.ndarray, indptr: jnp.ndarray,
+                  indices: jnp.ndarray, fanout: int) -> jnp.ndarray:
+    """Uniform with-replacement neighbour fanout over the global CSR —
+    the on-trace twin of ``NeighborSampler._sample_neighbors`` (modular pick
+    into each node's CSR span; isolated nodes self-loop)."""
+    deg = indptr[nodes + 1] - indptr[nodes]
+    r = jax.random.randint(key, nodes.shape + (fanout,), 0,
+                           jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+    offs = indptr[nodes][:, None] + r % jnp.maximum(deg, 1)[:, None]
+    nbrs = indices[offs]
+    return jnp.where((deg > 0)[:, None], nbrs, nodes[:, None])
+
+
+@dataclass(frozen=True)
+class DeviceEpochSampler:
+    """Stacked per-partition sampler state living on device.
+
+    The engine vmaps (stacked mode) or shard_maps (mesh mode) the per-
+    partition methods over the leading ``P`` axis of ``train_idx`` /
+    ``logp`` / ``k``; the global CSR, features and labels are replicated
+    (cross-partition neighbour fetch is allowed exactly like the host
+    sampler / DistDGL's remote fetch).
+    """
+
+    indptr: Any          # (N+1,) int32
+    indices: Any         # (E,)  int32
+    features: Any        # (N, D)
+    labels: Any          # (N,)  int32
+    train_idx: Any       # (P, T) int32 global ids, 0-padded
+    logp: Any            # (P, T) log Eq.3 probability, -inf on padding
+    k: Any               # (P,)  per-partition mini-epoch size
+    subset_size: int     # K = max_p k_p (static)
+    batch_size: int
+    num_batches: int     # I = ceil(K / B) (static)
+    fanouts: tuple
+    natural_iters: Any = None   # host np (P,): ceil(k_p / B) — budget input
+
+    # -------------------------------------------------- on-trace programs
+    def draw_epoch(self, key, logp_row, train_row, k_row):
+        """ONE partition's mini-epoch batch indices: Gumbel top-k subset,
+        uniform shuffle, fixed-shape ``(I, B)`` chunks + validity mask."""
+        global _DEVICE_TRACES
+        _DEVICE_TRACES += 1
+        kg, kp = jax.random.split(key)
+        pick = gumbel_subset(kg, logp_row, self.subset_size)
+        nodes = train_row[pick]                              # (K,)
+        valid = jnp.arange(self.subset_size) < k_row
+        # uniform shuffle WITHIN the valid prefix only: a partition whose
+        # mini-epoch k_row is below the fleet-wide K keeps its real nodes
+        # packed in the leading slots, so its natural_iters budgeted batches
+        # cover exactly its own mini-epoch (scattering them over all K slots
+        # would leave most of the draw untrained under a small budget)
+        r = jax.random.uniform(kp, (self.subset_size,))
+        order = jnp.argsort(jnp.where(valid, r, r + 2.0))
+        nodes, valid = nodes[order], valid[order]
+        pad = self.num_batches * self.batch_size - self.subset_size
+        nodes = jnp.pad(nodes, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+        return (nodes.reshape(self.num_batches, self.batch_size),
+                valid.reshape(self.num_batches, self.batch_size))
+
+    def make_batch(self, key, nodes, valid) -> dict:
+        """Materialise one training batch on-trace: fanout blocks + feature
+        gather — the jax twin of the pipeline's host ``make_batch``."""
+        f1, f2 = self.fanouts
+        k1, k2 = jax.random.split(key)
+        nbrs1 = device_fanout(k1, nodes, self.indptr, self.indices, f1)
+        nbrs2 = device_fanout(k2, nbrs1.reshape(-1), self.indptr,
+                              self.indices, f2)
+        b = nodes.shape[0]
+        d = self.features.shape[-1]
+        x_t = self.features[nodes]
+        x_1 = self.features[nbrs1]
+        x_2 = self.features[nbrs2].reshape(b, f1, f2, d)
+        labels = jnp.where(valid, self.labels[nodes], -1)
+        return {"x_t": x_t, "x_1": x_1, "x_2": x_2, "labels": labels,
+                "mask": valid.astype(self.features.dtype)}
+
+
+def build_device_epoch_sampler(graph, host_train, num_parts: int, *,
+                               batch_size: int, subset_fraction: float = 0.25,
+                               class_balanced: bool = True,
+                               fanouts: tuple = (10, 10),
+                               dtype=jnp.float32) -> DeviceEpochSampler:
+    """Stage a :class:`DeviceEpochSampler` from a CSRGraph + per-host train
+    sets.  Mini-epoch sizes mirror ``CBSampler.mini_epoch_size`` exactly, so
+    budget accounting (``natural_iters``) matches the host sampler's batch
+    counts."""
+    t_max = max(1, max(len(t) for t in host_train))
+    train_pad = np.zeros((num_parts, t_max), np.int32)
+    logp = np.full((num_parts, t_max), -np.inf, np.float32)
+    ks = np.zeros(num_parts, np.int32)
+    # the O(E) graph pass of Eq. 3 is train-set-independent: do it once
+    col_sq = (eq3_column_norms(graph.indptr, graph.indices)
+              if class_balanced else None)
+    for p in range(num_parts):
+        t = np.asarray(host_train[p])
+        if len(t) == 0:
+            continue
+        train_pad[p, : len(t)] = t
+        if class_balanced:
+            probs = np.asarray(cbs_probabilities_device(
+                graph.indptr, graph.indices, graph.labels, t,
+                col_sq=col_sq))
+            size = max(batch_size, int(len(t) * subset_fraction))
+        else:
+            probs = np.full(len(t), 1.0 / len(t))
+            size = len(t)
+        with np.errstate(divide="ignore"):
+            logp[p, : len(t)] = np.log(probs)
+        # a without-replacement draw cannot exceed the positive-probability
+        # support: cap the mini-epoch there (the host sampler's replace=True
+        # overflow fallback would duplicate nodes instead; capping keeps the
+        # device contract that zero-probability nodes are never trained on)
+        support = int((probs > 0).sum())
+        ks[p] = min(size, len(t), max(support, 0))
+    subset_size = int(ks.max()) if ks.max() > 0 else batch_size
+    num_batches = max(1, -(-subset_size // batch_size))
+    natural = np.maximum(1, -(-ks // batch_size)).astype(np.int32)
+    natural[ks == 0] = 0
+    return DeviceEpochSampler(
+        indptr=jnp.asarray(graph.indptr, jnp.int32),
+        indices=jnp.asarray(graph.indices, jnp.int32),
+        features=jnp.asarray(graph.features, dtype),
+        labels=jnp.asarray(graph.labels, jnp.int32),
+        train_idx=jnp.asarray(train_pad),
+        logp=jnp.asarray(logp),
+        k=jnp.asarray(ks),
+        subset_size=subset_size,
+        batch_size=batch_size,
+        num_batches=num_batches,
+        fanouts=tuple(fanouts),
+        natural_iters=natural,
+    )

@@ -61,6 +61,7 @@ class SequentialReference:
         self._grad_step = jax.jit(jax.value_and_grad(loss_fn))
         self._pstep1 = jax.jit(make_personalize_partition_step(
             loss_fn, optimizer, hp))
+        self._device_sampler = None
 
         # the all-reduce + optimizer update runs as ONE jitted function:
         # AdamW keeps float32 moments, and XLA's fused rounding of that
@@ -158,19 +159,21 @@ class SequentialReference:
         val_micro, _ = self._eval([params] * P, "val")
         return params, opt_state, jnp.stack(all_losses), val_micro, dt
 
-    def phase1_epoch(self, pparams, popt, batches, global_params, active):
+    def phase1_epoch(self, pparams, popt, batches, global_params, budgets):
         import time
 
         P = self.num_parts
-        active = np.asarray(active)
         leaves = jax.tree_util.tree_leaves(batches)
         iters = leaves[0].shape[0]
+        budgets = np.asarray(budgets)
+        if budgets.dtype == bool:        # pre-async API: full epoch or zero
+            budgets = np.where(budgets, iters, 0)
         pp = [jax.tree.map(lambda x: x[p], pparams) for p in range(P)]
         po = [jax.tree.map(lambda x: x[p], popt) for p in range(P)]
         # compile warm-up outside the timed window (pure, results discarded)
         jax.block_until_ready(self._pstep1(
             pp[0], po[0], jax.tree.map(lambda x: x[0, 0], batches),
-            global_params, jnp.asarray(active[0])))
+            global_params, jnp.asarray(budgets[0] > 0)))
 
         t0 = time.perf_counter()
         all_losses = []
@@ -178,8 +181,10 @@ class SequentialReference:
             losses = []
             for p in range(P):
                 b = jax.tree.map(lambda x: x[it, p], batches)
+                # the masked scan's semantics, legibly: partition p trains
+                # while it < its own budget, is frozen bitwise afterwards
                 pp[p], po[p], l = self._pstep1(pp[p], po[p], b, global_params,
-                                              jnp.asarray(active[p]))
+                                              jnp.asarray(it < budgets[p]))
                 losses.append(l)
             all_losses.append(jnp.stack(losses))
         jax.block_until_ready(pp)
@@ -188,6 +193,48 @@ class SequentialReference:
         from .stacking import stack_pytrees
         return (stack_pytrees(pp), stack_pytrees(po),
                 jnp.stack(all_losses), val_micro, dt)
+
+    # ----------------------------------------------- async personalization
+    def set_device_sampler(self, sampler) -> None:
+        self._device_sampler = sampler
+
+    def phase1_epoch_async(self, pparams, popt, keys, budgets, global_params):
+        """Python-loop reference for the on-device async path: the SAME
+        per-partition PRNG programs (mini-epoch draw, fanout sampling,
+        feature gather), executed one partition at a time — the parity
+        oracle for SPMDEngine.phase1_epoch_async."""
+        import time
+
+        if self._device_sampler is None:
+            raise ValueError("phase1_epoch_async needs set_device_sampler()")
+        ds = self._device_sampler
+        P = self.num_parts
+        budgets = np.asarray(budgets)
+        iters = ds.num_batches
+        pp = [jax.tree.map(lambda x: x[p], pparams) for p in range(P)]
+        po = [jax.tree.map(lambda x: x[p], popt) for p in range(P)]
+
+        t0 = time.perf_counter()
+        all_losses = []
+        for p in range(P):
+            kd, ke = jax.random.split(keys[p])
+            nodes, valid = ds.draw_epoch(kd, ds.logp[p], ds.train_idx[p],
+                                         ds.k[p])
+            iter_keys = jax.random.split(ke, iters)
+            losses = []
+            for it in range(iters):
+                batch = ds.make_batch(iter_keys[it], nodes[it], valid[it])
+                pp[p], po[p], l = self._pstep1(
+                    pp[p], po[p], batch, global_params,
+                    jnp.asarray(it < budgets[p]))
+                losses.append(l)
+            all_losses.append(jnp.stack(losses))
+        jax.block_until_ready(pp)
+        dt = time.perf_counter() - t0
+        val_micro, _ = self._eval(pp, "val")
+        from .stacking import stack_pytrees
+        return (stack_pytrees(pp), stack_pytrees(po),
+                jnp.stack(all_losses, axis=1), val_micro, dt)
 
     def evaluate(self, params, split: str = "test",
                  per_partition_params: bool = True):

@@ -104,9 +104,17 @@ class SPMDEngine:
 
       phase0_epoch(params, opt_state, batches) ->
           (params, opt_state, losses (I, P), val_micro (P,))
-      phase1_epoch(pparams, popt, batches, global_params, active) ->
+      phase1_epoch(pparams, popt, batches, global_params, budgets) ->
           (pparams, popt, losses (I, P), val_micro (P,))
+      phase1_epoch_async(pparams, popt, keys, budgets, global_params) ->
+          (pparams, popt, losses (i_run, P), val_micro (P,))
       evaluate(params_or_pparams, split) -> (micro (P,), preds (P, maxN))
+
+    ``budgets`` is a per-partition iteration budget (int32, (P,)); a bool
+    ``active`` vector is accepted and promoted to full-epoch-or-zero.  The
+    async variant needs :meth:`set_device_sampler` and runs the CBS
+    mini-epoch draw + fanout sampling + feature gather on the epoch trace
+    (DESIGN.md §4).
     """
 
     def __init__(self, model, loss_fn, optimizer, pg: PartitionedGraph,
@@ -149,6 +157,8 @@ class SPMDEngine:
         self.fwd = make_distributed_forward(model, {"max_nodes": pg.max_nodes},
                                             axis_name=AXIS, agg=agg)
         self._pstep = make_personalize_step(loss_fn, optimizer, hp)
+        self._device_sampler = None
+        self._sampler_gen = 0
         self._mesh = None
         if self.mode == "spmd":
             from ..launch.mesh import make_partition_mesh
@@ -157,8 +167,13 @@ class SPMDEngine:
 
     # ------------------------------------------------------------ plumbing
     def _shape_key(self, name: str, args) -> tuple:
+        # shardings are part of the key: an AOT executable is specialised to
+        # its input shardings, and epoch 2's params arrive sharded over the
+        # mesh while epoch 1's broadcast-fresh params were replicated
         leaves = jax.tree_util.tree_leaves(args)
-        return (name,) + tuple((l.shape, str(l.dtype)) for l in leaves)
+        return (name,) + tuple(
+            (l.shape, str(l.dtype), str(getattr(l, "sharding", "")))
+            for l in leaves)
 
     def _compiled(self, name: str, fn: Callable, *args):
         """AOT lower+compile once per input-shape signature, so epoch timing
@@ -199,14 +214,60 @@ class SPMDEngine:
             one_iter, (params, opt_state), batches)
         return params, opt_state, losses
 
-    def _phase1_stacked(self, pparams, popt, batches, global_params, active):
-        def one_iter(carry, b_it):
+    def _phase1_stacked(self, pparams, popt, batches, global_params, budgets):
+        def one_iter(carry, xs):
+            i, b_it = xs
             pp, po = carry
-            pp, po, losses = self._pstep(pp, po, b_it, global_params, active)
+            # masked variable-length scan: partition p trains while i < its
+            # budget, rides through bitwise-frozen afterwards
+            pp, po, losses = self._pstep(pp, po, b_it, global_params,
+                                         i < budgets)
             return (pp, po), losses
 
-        (pparams, popt), losses = jax.lax.scan(one_iter, (pparams, popt), batches)
+        iters = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        (pparams, popt), losses = jax.lax.scan(
+            one_iter, (pparams, popt), (jnp.arange(iters), batches))
         return pparams, popt, losses
+
+    def _async_partition_program(self, global_params, i_run: int):
+        """ONE partition's async epoch: mini-epoch draw, per-iteration batch
+        materialisation, masked training scan.  The SINGLE body both modes
+        execute — stacked vmaps it, spmd runs it per shard — so the PRNG
+        consumption order (and with it stacked/spmd bit-parity) cannot
+        drift between them."""
+        ds = self._device_sampler
+        pstep1 = make_personalize_partition_step(self.loss_fn, self.optimizer,
+                                                 self.hp)
+
+        def per_part(pp, po, key, budget, logp_row, train_row, k_row):
+            kd, ke = jax.random.split(key)
+            nodes, valid = ds.draw_epoch(kd, logp_row, train_row, k_row)
+            iter_keys = jax.random.split(ke, ds.num_batches)
+
+            def one(carry, xs):
+                i, n_i, v_i, k_i = xs
+                p, o = carry
+                batch = ds.make_batch(k_i, n_i, v_i)
+                p, o, l = pstep1(p, o, batch, global_params, i < budget)
+                return (p, o), l
+
+            (pp, po), losses = jax.lax.scan(
+                one, (pp, po),
+                (jnp.arange(i_run), nodes[:i_run], valid[:i_run],
+                 iter_keys[:i_run]))
+            return pp, po, losses
+
+        return per_part
+
+    def _phase1_async_stacked(self, pparams, popt, keys, budgets,
+                              global_params, i_run: int):
+        ds = self._device_sampler
+        per_part = self._async_partition_program(global_params, i_run)
+        pparams, popt, losses = jax.vmap(
+            per_part, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+                pparams, popt, keys, budgets,
+                ds.logp, ds.train_idx, ds.k)
+        return pparams, popt, losses.T              # (i_run, P)
 
     # --------------------------------------------------- spmd (mesh) mode
     def _phase0_spmd(self, params, opt_state, batches):
@@ -236,22 +297,25 @@ class SPMDEngine:
             out_specs=(P(), P(), P(None, AXIS)))
         return fn(params, opt_state, batches)
 
-    def _phase1_spmd(self, pparams, popt, batches, global_params, active):
+    def _phase1_spmd(self, pparams, popt, batches, global_params, budgets):
         pstep1 = make_personalize_partition_step(self.loss_fn, self.optimizer,
                                                  self.hp)
 
-        def shard_fn(pp_s, po_s, b_s, gp, act_s):
+        def shard_fn(pp_s, po_s, b_s, gp, bud_s):
             pp = jax.tree.map(lambda x: x[0], pp_s)
             po = jax.tree.map(lambda x: x[0], po_s)
             b = jax.tree.map(lambda x: x[:, 0], b_s)
-            act = act_s[0]
+            bud = bud_s[0]
+            iters = jax.tree_util.tree_leaves(b)[0].shape[0]
 
-            def one(carry, bi):
+            def one(carry, xs):
+                i, bi = xs
                 p, o = carry
-                p, o, l = pstep1(p, o, bi, gp, act)
+                p, o, l = pstep1(p, o, bi, gp, i < bud)
                 return (p, o), l
 
-            (pp, po), losses = jax.lax.scan(one, (pp, po), b)
+            (pp, po), losses = jax.lax.scan(one, (pp, po),
+                                            (jnp.arange(iters), b))
             return (jax.tree.map(lambda x: x[None], pp),
                     jax.tree.map(lambda x: x[None], po),
                     losses[:, None])
@@ -260,7 +324,29 @@ class SPMDEngine:
             shard_fn, self._mesh,
             in_specs=(P(AXIS), P(AXIS), P(None, AXIS), P(), P(AXIS)),
             out_specs=(P(AXIS), P(AXIS), P(None, AXIS)))
-        return fn(pparams, popt, batches, global_params, active)
+        return fn(pparams, popt, batches, global_params, budgets)
+
+    def _phase1_async_spmd(self, pparams, popt, keys, budgets, global_params,
+                           i_run: int):
+        ds = self._device_sampler
+
+        def shard_fn(pp_s, po_s, key_s, bud_s, gp, logp_s, train_s, k_s):
+            per_part = self._async_partition_program(gp, i_run)
+            pp = jax.tree.map(lambda x: x[0], pp_s)
+            po = jax.tree.map(lambda x: x[0], po_s)
+            pp, po, losses = per_part(pp, po, key_s[0], bud_s[0],
+                                      logp_s[0], train_s[0], k_s[0])
+            return (jax.tree.map(lambda x: x[None], pp),
+                    jax.tree.map(lambda x: x[None], po),
+                    losses[:, None])
+
+        fn = shard_map_compat(
+            shard_fn, self._mesh,
+            in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(),
+                      P(AXIS), P(AXIS), P(AXIS)),
+            out_specs=(P(AXIS), P(AXIS), P(None, AXIS)))
+        return fn(pparams, popt, keys, budgets, global_params,
+                  ds.logp, ds.train_idx, ds.k)
 
     def _eval_spmd(self, params, split: str, per_partition_params: bool):
         def shard_fn(prm, shard_s, labels_s, mask_s):
@@ -302,13 +388,67 @@ class SPMDEngine:
         val_micro, _ = self.evaluate(params, "val", per_partition_params=False)
         return params, opt_state, losses, val_micro, dt
 
-    def phase1_epoch(self, pparams, popt, batches, global_params, active):
-        active = jnp.asarray(active)
+    @staticmethod
+    def _as_budgets(active_or_budgets, iters: int):
+        """Phase-1 gating is expressed as per-partition iteration BUDGETS;
+        a bool `active` vector (the pre-async API) means full-epoch-or-zero."""
+        b = jnp.asarray(active_or_budgets)
+        if b.dtype == jnp.bool_:
+            b = jnp.where(b, iters, 0)
+        return b.astype(jnp.int32)
+
+    def phase1_epoch(self, pparams, popt, batches, global_params, budgets):
+        iters = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        budgets = self._as_budgets(budgets, iters)
         impl = self._phase1_spmd if self.mode == "spmd" else self._phase1_stacked
         fn = self._compiled("phase1", impl, pparams, popt, batches,
-                            global_params, active)
+                            global_params, budgets)
         (pparams, popt, losses), dt = self._timed(
-            fn, pparams, popt, batches, global_params, active)
+            fn, pparams, popt, batches, global_params, budgets)
+        val_micro, _ = self.evaluate(pparams, "val", per_partition_params=True)
+        return pparams, popt, losses, val_micro, dt
+
+    # ----------------------------------------------- async personalization
+    def set_device_sampler(self, sampler) -> None:
+        """Attach a :class:`DeviceEpochSampler`; required by
+        :meth:`phase1_epoch_async` (the fully-on-device mini-epoch path)."""
+        self._device_sampler = sampler
+        # the sampler's arrays are baked into the async trace as constants,
+        # so a new sampler must never hit an old executable (shapes alone
+        # can't distinguish two same-sized graphs) — and the superseded
+        # executables pin those arrays in device memory, so evict them
+        self._sampler_gen += 1
+        self._cache = {k: v for k, v in self._cache.items()
+                       if not str(k[0]).startswith("phase1_async-")}
+
+    def phase1_epoch_async(self, pparams, popt, keys, budgets, global_params):
+        """One asynchronous personalization step: mini-epoch resample, batch
+        shuffle, fanout sampling, feature gather AND the masked training scan
+        all inside ONE device program — no host NumPy on the mini-epoch path.
+
+        ``keys`` is (P, 2) uint32 per-partition PRNG state; ``budgets`` (P,)
+        int32 from :meth:`GPController.phase1_budgets`.  The scan's static
+        trip count is max(budgets) rounded up to a power of two (bounding
+        recompiles to log2(I) shapes), so converged partitions stop paying
+        for the stragglers' full epochs.
+        """
+        if self._device_sampler is None:
+            raise ValueError("phase1_epoch_async needs set_device_sampler()")
+        budgets = self._as_budgets(budgets, self._device_sampler.num_batches)
+        cap = self._device_sampler.num_batches
+        need = int(np.asarray(budgets).max())
+        i_run = 1
+        while i_run < min(need, cap):
+            i_run *= 2
+        i_run = min(i_run, cap)
+        impl = (self._phase1_async_spmd if self.mode == "spmd"
+                else self._phase1_async_stacked)
+        fn = self._compiled(
+            f"phase1_async-{i_run}-g{self._sampler_gen}",
+            lambda pp, po, k, b, gp: impl(pp, po, k, b, gp, i_run),
+            pparams, popt, keys, budgets, global_params)
+        (pparams, popt, losses), dt = self._timed(
+            fn, pparams, popt, keys, budgets, global_params)
         val_micro, _ = self.evaluate(pparams, "val", per_partition_params=True)
         return pparams, popt, losses, val_micro, dt
 

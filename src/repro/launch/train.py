@@ -31,6 +31,16 @@ import numpy as np
 
 
 def run_gnn(args) -> dict:
+    if args.engine == "spmd":
+        # a partition mesh needs >= parts devices; on a plain CPU host force
+        # XLA's host-platform device split BEFORE jax initialises (no-op when
+        # the flag is already set, e.g. on a real mesh)
+        import os
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.parts}").strip()
     from repro.pipeline import EATConfig, run_eat_distgnn
 
     cfg = EATConfig(
@@ -46,6 +56,9 @@ def run_gnn(args) -> dict:
         seed=args.seed,
         engine_mode=args.engine,
         use_pallas_agg=not args.no_pallas_agg,
+        async_personalize=args.async_personalize,
+        double_buffer=not args.no_double_buffer,
+        phase0_fraction=args.phase0_frac,
     )
     result = run_eat_distgnn(cfg, verbose=True)
     print(json.dumps(result.summary(), indent=2))
@@ -156,6 +169,17 @@ def main() -> int:
     g.add_argument("--no-pallas-agg", action="store_true",
                    help="use the jnp segment-op fallback instead of the "
                         "Pallas segment_agg kernel on the eval forward")
+    g.add_argument("--async-personalize", action="store_true",
+                   help="phase-1 with per-partition iteration budgets and "
+                        "the CBS mini-epoch draw on device (no host NumPy "
+                        "on the mini-epoch path)")
+    g.add_argument("--no-double-buffer", action="store_true",
+                   help="disable overlapping host-side sampling of epoch "
+                        "t+1 with the device step of epoch t")
+    g.add_argument("--phase0-frac", type=float, default=None,
+                   help="hard phase split: fraction of --epochs spent "
+                        "generalizing (default: loss-driven trigger; "
+                        "async runs default to 0.4)")
 
     l = sub.add_parser("llm")
     l.add_argument("--arch", default="llama3.2-1b")

@@ -25,6 +25,13 @@ Faithfulness notes:
     deployment has, and a deliberate change from the pre-engine driver,
     which evaluated each host's model solo over the whole graph.
   · CBS mini-epochs resample 25% of the host's training nodes by Eq. 3.
+  · ``async_personalize=True`` makes phase-1 genuinely asynchronous: each
+    partition gets its own iteration budget from GPController (masked
+    variable-length scan), and the mini-epoch draw itself moves on-device
+    (core/sampler/cbs_device.py) so no host NumPy runs on that path;
+    DESIGN.md §4 defines what "epoch" means when budgets differ.
+  · Host-side sampling (where it remains) is double-buffered: epoch t+1's
+    draw overlaps epoch t's fused device step.
   · Sampling may cross partition boundaries exactly like DistDGL's remote
     neighbour fetch; comm_halo_bytes accounts BOTH that sampled remote-fetch
     volume (cut_fraction-scaled, per training epoch) and the eval forward's
@@ -49,7 +56,8 @@ import numpy as np
 
 from .core import (GPController, GPHyperParams, GPScheduleConfig,
                    broadcast_to_partitions, partition_graph)
-from .core.sampler import CBSampler
+from .core.sampler import (CBSampler, build_device_epoch_sampler,
+                           host_draw_count)
 from .engine import (EngineConfig, make_engine, stack_epoch_batches,
                      stack_pytrees)
 from .graph import (BENCHMARKS, GraphSAGE, NeighborSampler,
@@ -76,10 +84,21 @@ class EATConfig:
     lambda_prox: float = 0.01
     subset_fraction: float = 0.25
     flatten_tol: float = 0.02
+    # hard phase split: fraction of max_epochs spent generalizing (the
+    # paper's "parameter controls the proportion"); None = loss-driven
+    # trigger, except async runs default to 0.4 so personalization — the
+    # phase async exists for — is reached even under tiny epoch budgets
+    phase0_fraction: float | None = None
     seed: int = 0
     centralized: bool = False             # 1 host, no partitioning (Table IV)
     engine_mode: str = "auto"             # auto | spmd | stacked | sequential
     use_pallas_agg: bool = True           # Pallas segment_agg on the eval path
+    # phase-1 runs fully on device: per-partition iteration budgets + the CBS
+    # mini-epoch draw / fanout sampling / feature gather on the epoch trace
+    # (no host NumPy on the mini-epoch path; DESIGN.md §4)
+    async_personalize: bool = False
+    # overlap host-side sampling of epoch t+1 with the device step of epoch t
+    double_buffer: bool = True
 
 
 @dataclass
@@ -99,6 +118,10 @@ class EATResult:
     comm_grad_bytes: int = 0
     comm_halo_bytes: int = 0
     engine_mode: str = "stacked"
+    phase1_time_s: float = 0.0         # slowest host's cumulative phase-1 time
+    phase1_epochs: int = 0
+    host_draws_phase1: int = 0         # host NumPy mini-epoch draws in phase-1
+                                       # (0 under async_personalize)
 
     def summary(self) -> dict:
         return {
@@ -117,6 +140,9 @@ class EATResult:
             "partition_time_s": round(self.partition_time_s, 2),
             "comm_grad_mb": round(self.comm_grad_bytes / 1e6, 1),
             "comm_halo_mb": round(self.comm_halo_bytes / 1e6, 1),
+            "phase1_time_s": round(self.phase1_time_s, 3),
+            "phase1_epochs": self.phase1_epochs,
+            "async_personalize": self.config.async_personalize,
         }
 
     def _label(self) -> str:
@@ -135,6 +161,59 @@ class EATResult:
 
 def _param_bytes(params) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
+
+
+class _EpochPrefetcher:
+    """Double-buffered host sampling: draw epoch t+1's batches in a background
+    thread while the device executes epoch t's fused step.
+
+    One worker thread at a time, so the samplers' NumPy RNG streams advance
+    in exactly the sequential order — results are identical to the
+    unbuffered pipeline, only the wall-clock overlaps.
+    """
+
+    def __init__(self, draw):
+        self._draw = draw
+        self._pending = None
+
+    def _spawn(self) -> None:
+        import threading
+
+        box = {}
+
+        def work():
+            try:
+                box["out"] = self._draw()
+            except BaseException as e:   # surfaces in next(), not swallowed
+                box["err"] = e
+
+        th = threading.Thread(target=work, daemon=True)
+        th.start()
+        self._pending = (th, box)
+
+    def next(self):
+        """Epoch t's batches (waits if still sampling), then immediately
+        kicks off epoch t+1's draw so it overlaps the caller's device step."""
+        if self._pending is None:
+            self._spawn()
+        th, box = self._pending
+        th.join()
+        if "err" in box:
+            raise box["err"]
+        self._spawn()
+        return box["out"]
+
+    def settle(self) -> None:
+        """Wait for any in-flight draw WITHOUT discarding it — quiesces the
+        worker so host_draw_count() snapshots are race-free."""
+        if self._pending is not None:
+            self._pending[0].join()
+
+    def close(self) -> None:
+        """Join and discard any in-flight draw (phase transition / shutdown)."""
+        if self._pending is not None:
+            self._pending[0].join()
+            self._pending = None
 
 
 def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
@@ -215,11 +294,17 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                 "mask": jnp.asarray(mask)}
 
     # ---------------- phase 0: generalization -----------------------------
-    ctrl = GPController(
-        num_partitions=n_parts,
-        config=GPScheduleConfig(max_epochs=cfg.max_epochs,
-                                flatten_tol=cfg.flatten_tol),
-    )
+    p0frac = cfg.phase0_fraction
+    if p0frac is None and cfg.async_personalize:
+        p0frac = 0.4
+    sched = GPScheduleConfig(
+        max_epochs=cfg.max_epochs,
+        flatten_tol=cfg.flatten_tol,
+        phase0_fraction=p0frac,
+        # a hard split must fit the epoch budget (e.g. --epochs 3)
+        min_phase0_epochs=(min(3, max(1, cfg.max_epochs // 3))
+                           if p0frac is not None else 3))
+    ctrl = GPController(num_partitions=n_parts, config=sched)
     sim_time = 0.0
     epoch_times: list[float] = []
     comm_grad = 0
@@ -228,16 +313,31 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     loss_hist: list[float] = []
     val_hist: list[float] = []
 
+    prefetch = (_EpochPrefetcher(
+        lambda: stack_epoch_batches(samplers, make_batch, n_parts))
+        if cfg.double_buffer else None)
+
+    def next_epoch_batches():
+        if prefetch is not None:
+            return prefetch.next()
+        return stack_epoch_batches(samplers, make_batch, n_parts)
+
+    def epoch_host_times(t_host, t_dev):
+        # synchronous epoch: everyone waits for the slowest host; the fused
+        # device step is attributed in equal 1/N shares.  Double-buffered,
+        # the next epoch's sampling overlaps this epoch's device step, so
+        # the steady-state epoch period is the max of the two, not the sum.
+        if cfg.double_buffer:
+            return np.maximum(t_host, t_dev / n_parts)
+        return t_host + t_dev / n_parts
+
     while not ctrl.done and ctrl.phase == 0:
-        batches, t_host, iters = stack_epoch_batches(samplers, make_batch,
-                                                     n_parts)
+        batches, t_host, iters = next_epoch_batches()
         params, opt_state, losses, val_micro, t_dev = engine.phase0_epoch(
             params, opt_state, batches)
         comm_grad += grad_bytes_per_sync * n_parts * iters
         comm_halo += halo_bytes_per_epoch
-        # synchronous epoch: everyone waits for the slowest host; the fused
-        # device step is attributed in equal 1/N shares
-        host_time = t_host + t_dev / n_parts
+        host_time = epoch_host_times(t_host, t_dev)
         sim_time += float(host_time.max())
         epoch_times.append(float(host_time.max()))
 
@@ -258,6 +358,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     personalize_start = ctrl.personalize_start_epoch
 
     # ---------------- phase 1: personalization ----------------------------
+    phase1_time = 0.0
+    phase1_epochs = 0
+    host_draws_p1 = 0
     if cfg.use_gp and not cfg.centralized:
         global_params = best_global
         pparams = broadcast_to_partitions(global_params, n_parts)
@@ -265,17 +368,52 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         best_personal = [jax.tree.map(lambda x: x[p], pparams)
                          for p in range(n_parts)]
         host_elapsed = np.zeros(n_parts)
+
+        dev_sampler = None
+        if cfg.async_personalize:
+            # from here on the mini-epoch path is one device program: join
+            # and discard any in-flight host draw, then stage the device
+            # sampler (Eq. 3 + fanout structure + features, once)
+            if prefetch is not None:
+                prefetch.close()
+            dev_sampler = build_device_epoch_sampler(
+                graph, host_train, n_parts, batch_size=cfg.batch_size,
+                subset_fraction=cfg.subset_fraction if cfg.use_cbs else 1.0,
+                class_balanced=cfg.use_cbs, fanouts=cfg.fanouts)
+            engine.set_device_sampler(dev_sampler)
+            base_keys = jax.random.split(
+                jax.random.PRNGKey(cfg.seed ^ 0xCB5D), n_parts)
+        elif prefetch is not None:
+            prefetch.settle()       # quiesce the worker: race-free snapshot
+        # sync note: the count includes the final speculative (discarded)
+        # prefetch epoch — those draws still run on the host during phase-1
+        draws_at_p1_start = host_draw_count()
+
         while not ctrl.done:
             active_np = ctrl.active_partitions
-            batches, t_host, iters = stack_epoch_batches(samplers, make_batch,
-                                                         n_parts)
-            pparams, popt, losses, val_micro, t_dev = engine.phase1_epoch(
-                pparams, popt, batches, global_params,
-                jnp.asarray(active_np))
+            if cfg.async_personalize:
+                budgets = ctrl.phase1_budgets(dev_sampler.natural_iters)
+                keys = jax.vmap(jax.random.fold_in, (0, None))(
+                    base_keys, ctrl.epoch)
+                pparams, popt, losses, val_micro, t_dev = (
+                    engine.phase1_epoch_async(pparams, popt, keys,
+                                              jnp.asarray(budgets),
+                                              global_params))
+                # each host pays for its own budgeted share of the fused
+                # step; converged hosts (budget 0) pay nothing
+                host_elapsed += t_dev * budgets / max(1, int(budgets.sum()))
+            else:
+                batches, t_host, iters = next_epoch_batches()
+                budgets = ctrl.phase1_budgets(iters)
+                pparams, popt, losses, val_micro, t_dev = engine.phase1_epoch(
+                    pparams, popt, batches, global_params,
+                    jnp.asarray(budgets))
+                host_elapsed += np.where(
+                    active_np, epoch_host_times(t_host, t_dev), 0.0)
             comm_halo += halo_bytes_per_epoch
-            host_elapsed += np.where(active_np, t_host + t_dev / n_parts, 0.0)
             scores = np.asarray(val_micro)
             is_best = ctrl.record_phase1(scores)
+            phase1_epochs += 1
             for p in np.flatnonzero(is_best):
                 best_personal[p] = jax.tree.map(lambda x: x[p], pparams)
             loss_hist.append(float(np.asarray(losses)[-1].mean()))
@@ -283,12 +421,19 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
             if verbose:
                 print(f"[phase-1] epoch {ctrl.epoch:3d} "
                       f"val-micro {scores.mean()*100:.2f} "
-                      f"active {int(active_np.sum())}/{n_parts}")
+                      f"active {int(active_np.sum())}/{n_parts} "
+                      f"budgets {np.asarray(budgets).tolist()}")
         # async phase: distributed time = slowest host's own cumulative time
-        sim_time += float(host_elapsed.max())
+        if prefetch is not None:
+            prefetch.close()        # settle in-flight draws before counting
+        host_draws_p1 = host_draw_count() - draws_at_p1_start
+        phase1_time = float(host_elapsed.max())
+        sim_time += phase1_time
         final_stacked = stack_pytrees(best_personal)
     else:
         final_stacked = broadcast_to_partitions(best_global, n_parts)
+        if prefetch is not None:
+            prefetch.close()
 
     # ---------------- final evaluation -------------------------------------
     _, preds = engine.evaluate(final_stacked, "test",
@@ -315,4 +460,6 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         loss_history=loss_hist, val_history=val_hist,
         comm_grad_bytes=comm_grad, comm_halo_bytes=comm_halo,
         engine_mode=engine.mode,
+        phase1_time_s=phase1_time, phase1_epochs=phase1_epochs,
+        host_draws_phase1=host_draws_p1,
     )

@@ -1,0 +1,17 @@
+"""Shared persistent-compile-cache prelude for subprocess test scripts.
+
+The compile-bound subprocess tests (engine parity fp64/spmd, the launch
+small-mesh compile) prepend this to their ``python -c`` scripts so lowered
+XLA artifacts persist under the repo's ``.jax_cache/`` and reruns skip
+compilation.  One copy here keeps the recipe in sync across modules.
+"""
+import os
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CACHE_PRELUDE = (
+    "import os, jax\n"
+    f"jax.config.update('jax_compilation_cache_dir', "
+    f"{os.path.join(REPO_ROOT, '.jax_cache')!r})\n"
+    "jax.config.update('jax_persistent_cache_min_compile_time_secs', 0.5)\n"
+)

@@ -48,6 +48,39 @@ def test_controller_phases():
     assert not ctrl.active_partitions[2]
 
 
+def test_phase1_budgets_track_stoppers():
+    """The engine's budget API: stopped partitions get 0, live ones their own
+    natural mini-epoch iteration count (scalar broadcasts, arrays pass
+    through); tapering sheds iterations as patience burns."""
+    ctrl = GPController(num_partitions=3,
+                        config=GPScheduleConfig(max_epochs=50,
+                                                min_phase0_epochs=1))
+    for _ in range(6):
+        ctrl.record_phase0(1.0, 0.5)
+    ctrl.start_personalization()
+    np.testing.assert_array_equal(ctrl.phase1_budgets(7), [7, 7, 7])
+    np.testing.assert_array_equal(ctrl.phase1_budgets([3, 9, 5]), [3, 9, 5])
+    # stall partitions 0 and 2 until their stop fires
+    for i in range(12):
+        ctrl.record_phase1(np.array([0.5, 0.5 + 0.01 * i, 0.5]))
+        if not ctrl.active_partitions[0]:
+            break
+    b = ctrl.phase1_budgets(7)
+    assert b[0] == 0 and b[2] == 0 and b[1] == 7
+    assert b.dtype == np.int32
+    # taper: a live partition burning patience sheds iterations but keeps >= 1
+    ctrl2 = GPController(num_partitions=2,
+                         config=GPScheduleConfig(max_epochs=50,
+                                                 min_phase0_epochs=1))
+    for _ in range(6):
+        ctrl2.record_phase0(1.0, 0.5)
+    ctrl2.start_personalization()
+    ctrl2.record_phase1(np.array([0.9, 0.5]))
+    ctrl2.record_phase1(np.array([0.1, 0.6]))   # partition 0: 1 bad epoch
+    t = ctrl2.phase1_budgets(10, taper=True)
+    assert 1 <= t[0] < 10 and t[1] == 10
+
+
 # ------------------------------------------------------------------ steps --
 
 def _quadratic_loss(target):
