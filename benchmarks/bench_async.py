@@ -45,6 +45,12 @@ def run_config(parts: int, async_p: bool) -> dict:
             ("dataset", "method", "parts", "engine", "micro_f1", "macro_f1",
              "epoch_time_s", "epochs", "personalize_start",
              "phase1_time_s", "phase1_epochs", "train_time_s")}
+    # bytes moved, not just seconds: the eval forward's per-layer halo
+    # payload plus per-phase communication volume (grad all-reduce is
+    # phase-0 only).  .get(): rows cached before these fields existed.
+    for k in ("halo_bytes_per_layer", "comm_grad_mb", "comm_halo_mb",
+              "comm_halo_phase0_mb", "comm_halo_phase1_mb"):
+        keep[k] = row.get(k)
     keep["mode"] = "async" if async_p else "sync"
     keep["phase1_epoch_time_s"] = (
         round(row["phase1_time_s"] / max(1, row["phase1_epochs"]), 4))

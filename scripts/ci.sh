@@ -13,6 +13,12 @@
 set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# ONE shared persistent XLA compile cache for the whole run: the in-process
+# tests pick it up from the environment, the subprocess scripts point at the
+# same directory via tests/_jax_cache.py, so every stage reuses every other
+# stage's lowered executables across reruns
+export JAX_COMPILATION_CACHE_DIR="$PWD/.jax_cache"
+export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0.5
 
 mode=${1:-tier1}
 if [ "$mode" = "slow" ]; then
@@ -62,6 +68,8 @@ echo "OK: no regression vs seed baseline"
 # ---- 30 s runtime gate -----------------------------------------------------
 # A tier-1 test that needs > 30 s (call or fixture setup) must either carry
 # the `slow` marker or be grandfathered in tests/tier1_slowlist.txt.
+# Slowlist line format: <test-id> [baseline-seconds]; the optional baseline
+# drives the wall-time delta report below.
 slowlist=tests/tier1_slowlist.txt
 offenders=$(echo "$out" | awk '
     $1 ~ /^[0-9]+(\.[0-9]+)?s$/ && ($2 == "call" || $2 == "setup") {
@@ -72,7 +80,7 @@ new_offenders=""
 while IFS= read -r line; do
     [ -z "$line" ] && continue
     id=${line#* }
-    if ! grep -qxF "$id" "$slowlist" 2>/dev/null; then
+    if ! awk '$1 !~ /^#/ {print $1}' "$slowlist" 2>/dev/null | grep -qxF "$id"; then
         new_offenders="$new_offenders$line"$'\n'
     fi
 done <<EOF
@@ -85,6 +93,29 @@ if [ -n "$new_offenders" ]; then
     exit 1
 fi
 echo "OK: no new tier-1 test exceeds 30 s"
+
+# ---- wall-time delta vs recorded baselines ---------------------------------
+# Non-gating visibility: suite total and the grandfathered tests' durations
+# against the baselines recorded in the slowlist, so kernel/test additions
+# don't silently regress tier-1 runtime.
+total_s=$(echo "$out" | grep -oE "in [0-9]+(\.[0-9]+)?s" | tail -1 | grep -oE "[0-9]+(\.[0-9]+)?")
+base_total=$(awk '/^# total-baseline-seconds:/{print $3}' "$slowlist" 2>/dev/null)
+if [ -n "$total_s" ] && [ -n "$base_total" ]; then
+    awk -v c="$total_s" -v b="$base_total" 'BEGIN{
+        printf "tier-1 wall time: %.0fs (baseline %.0fs, delta %+.0fs)\n", c, b, c-b}'
+elif [ -n "$total_s" ]; then
+    echo "tier-1 wall time: ${total_s}s (no baseline recorded in $slowlist)"
+fi
+while read -r id base; do
+    cur=$(echo "$out" | awk -v id="$id" '
+        $1 ~ /^[0-9]+(\.[0-9]+)?s$/ && ($2 == "call" || $2 == "setup") && $3 == id {
+            s += substr($1, 1, length($1) - 1) + 0 } END { if (s) print s }')
+    [ -z "$cur" ] && continue
+    awk -v id="$id" -v c="$cur" -v b="$base" 'BEGIN{
+        printf "  %-70s %6.0fs (baseline %.0fs, delta %+.0fs)\n", id, c, b, c-b}'
+done <<EOF
+$(awk '$1 !~ /^#/ && NF >= 2 {print $1, $2}' "$slowlist" 2>/dev/null)
+EOF
 
 if [ "$mode" = "all" ]; then
     python -m pytest -m slow -q || exit 1

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.gp.trainer import GPHyperParams, make_personalize_partition_step
-from ..graph.distributed import PartitionedGraph, make_ref_mean_agg
+from ..graph.distributed import (PartitionedGraph, make_ref_mean_agg,
+                                 make_ref_split_agg)
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 
@@ -40,6 +41,8 @@ class SequentialReference:
         self.num_parts = pg.num_parts
         self.num_classes = model.num_classes
         self.max_nodes = pg.max_nodes
+        self.own_cap = pg.own_cap
+        self.overlap = bool(getattr(config, "overlap_halo", False))
         self.features = jnp.asarray(pg.features, f)        # (P, maxN, D)
         self.send_idx = jnp.asarray(pg.send_idx)
         self.send_mask = jnp.asarray(pg.send_mask, f)
@@ -50,14 +53,28 @@ class SequentialReference:
             "val": np.asarray(pg.val_mask),
             "test": np.asarray(pg.test_mask),
         }
-        # per-partition edge views for the reference aggregation
-        self._agg = make_ref_mean_agg(pg.max_nodes)
-        self._edge_shards = [
-            {"edge_src": jnp.asarray(pg.edge_src[p]),
-             "edge_dst": jnp.asarray(pg.edge_dst[p]),
-             "edge_mask": jnp.asarray(pg.edge_mask[p], f)}
-            for p in range(pg.num_parts)
-        ]
+        # per-partition edge views for whichever forward this config runs:
+        # either the combined-edge reference aggregation, or (overlap) the
+        # destination-disjoint CSR shards + static degree + interior counts
+        self.n_int = np.asarray(pg.n_int)
+        if self.overlap:
+            self._agg_int, self._agg_bnd = make_ref_split_agg(pg.own_cap)
+            self._split_shards = [
+                {"int_src": jnp.asarray(pg.int_src[p]),
+                 "int_dst": jnp.asarray(pg.int_dst[p]),
+                 "bnd_src": jnp.asarray(pg.bnd_src[p]),
+                 "bnd_dst": jnp.asarray(pg.bnd_dst[p]),
+                 "deg": jnp.asarray(pg.deg[p], f)}
+                for p in range(pg.num_parts)
+            ]
+        else:
+            self._agg = make_ref_mean_agg(pg.max_nodes)
+            self._edge_shards = [
+                {"edge_src": jnp.asarray(pg.edge_src[p]),
+                 "edge_dst": jnp.asarray(pg.edge_dst[p]),
+                 "edge_mask": jnp.asarray(pg.edge_mask[p], f)}
+                for p in range(pg.num_parts)
+            ]
         self._grad_step = jax.jit(jax.value_and_grad(loss_fn))
         self._pstep1 = jax.jit(make_personalize_partition_step(
             loss_fn, optimizer, hp))
@@ -97,6 +114,8 @@ class SequentialReference:
     def _full_forward(self, params_list: list) -> list:
         """Layer-synchronous 2-layer GraphSAGE over all partitions — the same
         schedule the per-shard fwd runs, unrolled in Python."""
+        if self.overlap:
+            return self._full_forward_overlap(params_list)
         P = self.num_parts
         hs = [self.features[p] for p in range(P)]
         hs = self._exchange(hs)
@@ -111,6 +130,36 @@ class SequentialReference:
             lp = params_list[p].layer2
             agg = self._agg(h1[p], self._edge_shards[p])
             logits.append(h1[p] @ lp.w_self + agg @ lp.w_neigh + lp.b)
+        return logits
+
+    def _split_layer(self, hs: list, layers: list, activate: bool) -> list:
+        """One boundary/interior split layer, unrolled in Python — the
+        legible rendering of make_overlap_forward's schedule: interior
+        aggregation and the self-term run on the pre-exchange embeddings
+        (the work that hides the exchange), boundary aggregation on the
+        post-exchange ones, and a bitwise-safe per-row select joins them."""
+        P, oc = self.num_parts, self.own_cap
+        agg_i = [self._agg_int(hs[p], self._split_shards[p]) for p in range(P)]
+        self_t = [hs[p][:oc] @ layers[p].w_self for p in range(P)]
+        hs = self._exchange(hs)
+        outs = []
+        for p in range(P):
+            agg_b = self._agg_bnd(hs[p], self._split_shards[p])
+            rows = jnp.arange(oc)[:, None]
+            agg = jnp.where(rows < int(self.n_int[p]), agg_i[p], agg_b)
+            out = self_t[p] + agg @ layers[p].w_neigh + layers[p].b
+            if activate:
+                out = jax.nn.relu(out)
+            # owned rows back into the padded local space; trash row stays 0
+            outs.append(jnp.zeros((self.max_nodes, out.shape[-1]),
+                                  out.dtype).at[:oc].set(out))
+        return outs
+
+    def _full_forward_overlap(self, params_list: list) -> list:
+        P = self.num_parts
+        hs = [self.features[p] for p in range(P)]
+        h1 = self._split_layer(hs, [p.layer1 for p in params_list], True)
+        logits = self._split_layer(h1, [p.layer2 for p in params_list], False)
         return logits
 
     def _eval(self, params_list: list, split: str):

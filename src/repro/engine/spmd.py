@@ -41,11 +41,14 @@ from ..core.gp.trainer import (GPHyperParams,
                                make_personalize_partition_step,
                                make_personalize_step)
 from ..graph.distributed import (PartitionedGraph, make_distributed_forward,
-                                 make_pallas_mean_agg, make_ref_mean_agg)
+                                 make_overlap_forward, make_pallas_mean_agg,
+                                 make_pallas_split_agg, make_ref_mean_agg,
+                                 make_ref_split_agg)
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 from .compat import shard_map_compat
-from .stacking import build_stacked_blocks, stack_pytrees
+from .stacking import (build_stacked_blocks, build_stacked_split_blocks,
+                       stack_pytrees)
 
 __all__ = ["AXIS", "EngineConfig", "SPMDEngine", "stack_epoch_batches"]
 
@@ -58,6 +61,13 @@ class EngineConfig:
     use_pallas_agg: bool = True     # route eval aggregation through Pallas
     interpret: bool = True          # Pallas interpret mode (CPU container)
     dtype: Any = jnp.float32        # float dtype of graph features
+    # boundary/interior split forward: overlap the halo exchange with
+    # interior aggregation + the self-term matmul, and restrict dense
+    # compute to owned rows (DESIGN.md §5)
+    overlap_halo: bool = False
+    # 0 = one all_to_all; >= 1 = ppermute ring with that many chunks per
+    # step (per-chunk sends interleave on a real mesh; bit-identical data)
+    ring_chunks: int = 0
 
 
 def _resolve_mode(mode: str, num_parts: int) -> str:
@@ -130,21 +140,51 @@ class SPMDEngine:
         self.max_nodes = pg.max_nodes
         self.mode = _resolve_mode(config.mode, pg.num_parts)
 
-        blocks = build_stacked_blocks(pg)
         f = config.dtype
         self.shards = {
             "features": jnp.asarray(pg.features, f),
             "send_idx": jnp.asarray(pg.send_idx),
             "send_mask": jnp.asarray(pg.send_mask, f),
             "recv_pos": jnp.asarray(pg.recv_pos),
-            "edge_src": jnp.asarray(pg.edge_src),
-            "edge_dst": jnp.asarray(pg.edge_dst),
-            "edge_mask": jnp.asarray(pg.edge_mask, f),
-            "blk_src": jnp.asarray(blocks.src),
-            "blk_dst": jnp.asarray(blocks.local_dst),
-            "blk_mask": jnp.asarray(blocks.mask, f),
-            "blk_deg": jnp.asarray(blocks.deg, f),
         }
+        if config.overlap_halo:
+            # split forward state: the per-partition interior row count plus
+            # ONE aggregation backend's structures (the other is never read)
+            self.shards["n_int"] = jnp.asarray(pg.n_int, jnp.int32)
+            if config.use_pallas_agg:
+                bi, bb = build_stacked_split_blocks(pg)
+                self.shards.update({
+                    "blk_int_src": jnp.asarray(bi.src),
+                    "blk_int_dst": jnp.asarray(bi.local_dst),
+                    "blk_int_mask": jnp.asarray(bi.mask, f),
+                    "blk_int_deg": jnp.asarray(bi.deg, f),
+                    "blk_bnd_src": jnp.asarray(bb.src),
+                    "blk_bnd_dst": jnp.asarray(bb.local_dst),
+                    "blk_bnd_mask": jnp.asarray(bb.mask, f),
+                    "blk_bnd_deg": jnp.asarray(bb.deg, f),
+                })
+            else:
+                self.shards.update({
+                    "int_src": jnp.asarray(pg.int_src),
+                    "int_dst": jnp.asarray(pg.int_dst),
+                    "bnd_src": jnp.asarray(pg.bnd_src),
+                    "bnd_dst": jnp.asarray(pg.bnd_dst),
+                    "deg": jnp.asarray(pg.deg, f),
+                })
+        else:
+            self.shards.update({
+                "edge_src": jnp.asarray(pg.edge_src),
+                "edge_dst": jnp.asarray(pg.edge_dst),
+                "edge_mask": jnp.asarray(pg.edge_mask, f),
+            })
+            if config.use_pallas_agg:
+                blocks = build_stacked_blocks(pg)
+                self.shards.update({
+                    "blk_src": jnp.asarray(blocks.src),
+                    "blk_dst": jnp.asarray(blocks.local_dst),
+                    "blk_mask": jnp.asarray(blocks.mask, f),
+                    "blk_deg": jnp.asarray(blocks.deg, f),
+                })
         self.labels = jnp.asarray(pg.labels)
         self.masks = {
             "train": jnp.asarray(pg.train_mask),
@@ -152,10 +192,18 @@ class SPMDEngine:
             "test": jnp.asarray(pg.test_mask),
         }
 
-        agg = (make_pallas_mean_agg(pg.max_nodes, interpret=config.interpret)
-               if config.use_pallas_agg else make_ref_mean_agg(pg.max_nodes))
-        self.fwd = make_distributed_forward(model, {"max_nodes": pg.max_nodes},
-                                            axis_name=AXIS, agg=agg)
+        meta = {"max_nodes": pg.max_nodes, "own_cap": pg.own_cap}
+        if config.overlap_halo:
+            aggs = (make_pallas_split_agg(pg.own_cap, interpret=config.interpret)
+                    if config.use_pallas_agg else make_ref_split_agg(pg.own_cap))
+            self.fwd = make_overlap_forward(
+                model, meta, axis_name=AXIS, agg_interior=aggs[0],
+                agg_boundary=aggs[1], ring_chunks=config.ring_chunks)
+        else:
+            agg = (make_pallas_mean_agg(pg.max_nodes, interpret=config.interpret)
+                   if config.use_pallas_agg else make_ref_mean_agg(pg.max_nodes))
+            self.fwd = make_distributed_forward(model, meta, axis_name=AXIS,
+                                                agg=agg)
         self._pstep = make_personalize_step(loss_fn, optimizer, hp)
         self._device_sampler = None
         self._sampler_gen = 0

@@ -18,7 +18,8 @@ import numpy as np
 from ..graph.distributed import PartitionedGraph
 from ..kernels.segment_agg import BEC, BN, build_edge_blocks
 
-__all__ = ["StackedBlocks", "build_stacked_blocks", "stack_pytrees"]
+__all__ = ["StackedBlocks", "build_stacked_blocks", "build_stacked_split_blocks",
+           "stack_pytrees"]
 
 
 @dataclass(frozen=True)
@@ -66,6 +67,64 @@ def build_stacked_blocks(pg: PartitionedGraph, bn: int = BN,
         deg[p, : b.num_blocks] = b.deg
     return StackedBlocks(num_blocks=nb, edges_per_block=be,
                          src=src, local_dst=ldst, mask=mask, deg=deg)
+
+
+def _stack_blocks(per_part, num_parts: int, bn: int) -> StackedBlocks:
+    """Pad a list of per-partition EdgeBlocks to fleet-common shapes
+    (at least one block so an all-empty fleet still yields a valid grid)."""
+    nb = max(1, max(b.num_blocks for b in per_part))
+    be = max(b.edges_per_block for b in per_part)
+    P = num_parts
+    src = np.zeros((P, nb, be), dtype=np.int32)
+    ldst = np.zeros((P, nb, be), dtype=np.int32)
+    mask = np.zeros((P, nb, be), dtype=np.float32)
+    deg = np.ones((P, nb, bn), dtype=np.float32)
+    for p, b in enumerate(per_part):
+        src[p, : b.num_blocks, : b.edges_per_block] = b.src
+        ldst[p, : b.num_blocks, : b.edges_per_block] = b.local_dst
+        mask[p, : b.num_blocks, : b.edges_per_block] = b.mask
+        deg[p, : b.num_blocks] = b.deg
+    return StackedBlocks(num_blocks=nb, edges_per_block=be,
+                         src=src, local_dst=ldst, mask=mask, deg=deg)
+
+
+def _sub_csr(src: np.ndarray, dst: np.ndarray, mask: np.ndarray,
+             num_rows: int, row_base: int = 0):
+    """CSR over a destination sub-range rebased to start at row 0 (edges
+    must already be dst-major ascending, as build_partitioned_graph emits)."""
+    real = mask > 0
+    s = src[real].astype(np.int64)
+    d = dst[real].astype(np.int64) - row_base
+    counts = np.bincount(d, minlength=num_rows) if num_rows else np.zeros(0, np.int64)
+    indptr = np.zeros(num_rows + 1, dtype=np.int64)
+    np.cumsum(counts[:num_rows], out=indptr[1:])
+    return indptr, s
+
+
+def build_stacked_split_blocks(pg: PartitionedGraph, bn: int = BN,
+                               bec: int = BEC):
+    """Blocked structures for the overlapped forward's interior/boundary
+    aggregation split (DESIGN.md §5).
+
+    Returns ``(interior, boundary)`` :class:`StackedBlocks`.  Each half
+    blocks ONLY its own row range — interior rows ``[0, n_int)``, boundary
+    rows rebased to ``[0, n_own - n_int)`` — so each kernel grid scales
+    with its row count, and ``segment_agg_rows`` places the halves at row
+    0 and at the partition's ``n_int`` offset respectively.  A
+    zero-boundary (or zero-interior) partition contributes all-pad blocks
+    that aggregate to exact zeros.
+    """
+    ints, bnds = [], []
+    for p in range(pg.num_parts):
+        ip, isrc = _sub_csr(pg.int_src[p], pg.int_dst[p], pg.int_mask[p],
+                            int(pg.n_int[p]))
+        ints.append(build_edge_blocks(ip, isrc, bn=bn, bec=bec))
+        n_bnd = int(pg.n_own[p] - pg.n_int[p])
+        bp, bsrc = _sub_csr(pg.bnd_src[p], pg.bnd_dst[p], pg.bnd_mask[p],
+                            n_bnd, row_base=int(pg.n_int[p]))
+        bnds.append(build_edge_blocks(bp, bsrc, bn=bn, bec=bec))
+    return (_stack_blocks(ints, pg.num_parts, bn),
+            _stack_blocks(bnds, pg.num_parts, bn))
 
 
 def stack_pytrees(trees):

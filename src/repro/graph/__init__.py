@@ -3,12 +3,14 @@ from .synthetic import SyntheticSpec, make_benchmark, BENCHMARKS
 from .sampling import NeighborSampler, SampledBlocks
 from .sage import GraphSAGE, SAGEParams
 from .distributed import (PartitionedGraph, build_partitioned_graph,
-                          make_distributed_forward, make_pallas_mean_agg,
-                          make_ref_mean_agg)
+                          make_distributed_forward, make_overlap_forward,
+                          make_pallas_mean_agg, make_pallas_split_agg,
+                          make_ref_mean_agg, make_ref_split_agg)
 
 __all__ = [
     "CSRGraph", "SyntheticSpec", "make_benchmark", "BENCHMARKS",
     "NeighborSampler", "SampledBlocks", "GraphSAGE", "SAGEParams",
     "PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
-    "make_pallas_mean_agg", "make_ref_mean_agg",
+    "make_overlap_forward", "make_pallas_mean_agg", "make_pallas_split_agg",
+    "make_ref_mean_agg", "make_ref_split_agg",
 ]

@@ -1,18 +1,32 @@
 """Distributed graph storage + halo exchange — DistDGL's communication
 pattern rendered as TPU-native SPMD collectives.
 
-Each partition owns a contiguous local index space:
+Each partition owns a contiguous local index space (DESIGN.md §5):
 
-    [0, n_own)            owned nodes (this shard computes their embeddings)
-    [n_own, n_own+n_halo) halo slots (1-hop remote neighbours, received)
-    [n_local, maxN)       padding (+ one trash row at maxN-1)
+    [0, n_int)                interior owned nodes: every in-neighbour is
+                              local, so their aggregation needs NO halo data
+    [n_int, n_own)            boundary owned nodes: >= 1 in-neighbour lives
+                              on another partition
+    [n_own, n_own + n_halo)   halo slots (1-hop remote in-neighbours, recv'd)
+    [n_local, maxN)           padding, with ONE trash row at ``trash_row``
+                              (== maxN - 1) that is guaranteed all-zero and
+                              never referenced by a real edge
 
-Per layer, boundary embeddings are exchanged with a single
-``jax.lax.all_to_all`` over the data axis using *precomputed, padded* send
-lists (DistDGL's dynamic RPC → static collective; DESIGN.md §2).  The bytes
-on the wire are exactly ``2 · Σ_p halo_p · D · dtype`` per forward — i.e.
-proportional to the edge-cut that EW partitioning minimises, which is how
-the paper's comm saving shows up on a TPU mesh.
+Per layer, boundary embeddings are exchanged with either a single
+``jax.lax.all_to_all`` or a chunked ``ppermute`` ring over the data axis,
+using *precomputed, padded* send lists (DistDGL's dynamic RPC → static
+collective; DESIGN.md §2).  The bytes on the wire are exactly
+``2 · Σ_p halo_p · D · dtype`` per forward — i.e. proportional to the
+edge-cut that EW partitioning minimises.
+
+The interior/boundary split exists so the exchange can OVERLAP compute
+(:func:`make_overlap_forward`): interior rows aggregate — and the self-term
+matmul runs — while the halo exchange is in flight; only the boundary rows'
+aggregation waits for the landed halo embeddings.  Local edges are therefore
+classified into two destination-disjoint CSR shards (interior-dst vs
+boundary-dst) whose per-row edge order matches the combined edge list, so
+the split aggregation is bit-for-bit identical to the synchronous one on
+owned rows.
 
 Everything is padded to identical shapes across partitions so the whole
 structure stacks into (P, ...) arrays sharded over the data axis.
@@ -30,7 +44,8 @@ from .csr import CSRGraph
 from .sage import GraphSAGE, SAGEParams
 
 __all__ = ["PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
-           "make_ref_mean_agg", "make_pallas_mean_agg"]
+           "make_overlap_forward", "make_ref_mean_agg", "make_pallas_mean_agg",
+           "make_ref_split_agg", "make_pallas_split_agg"]
 
 
 @dataclass
@@ -39,13 +54,22 @@ class PartitionedGraph:
 
     num_parts: int
     n_own: np.ndarray          # (P,) owned-node counts
+    n_int: np.ndarray          # (P,) interior counts (first n_int owned rows)
     n_halo: np.ndarray         # (P,) halo counts
     max_nodes: int             # padded local size (incl. trash row)
+    own_cap: int               # max(n_own): static owned-row cap
     features: np.ndarray       # (P, maxN, D)   halo+pad rows zero
     labels: np.ndarray         # (P, maxN)      -1 on non-owned
     edge_src: np.ndarray       # (P, maxE) local ids  (pad -> trash row)
     edge_dst: np.ndarray       # (P, maxE) local ids  (pad -> trash row)
     edge_mask: np.ndarray      # (P, maxE) float32
+    int_src: np.ndarray        # (P, maxEi) interior-dst edges (owned src only)
+    int_dst: np.ndarray        # (P, maxEi) dst in [0, n_int)  (pad -> own_cap)
+    int_mask: np.ndarray       # (P, maxEi) float32
+    bnd_src: np.ndarray        # (P, maxEb) boundary-dst edges (owned+halo src)
+    bnd_dst: np.ndarray        # (P, maxEb) dst in [n_int, n_own) (pad -> own_cap)
+    bnd_mask: np.ndarray       # (P, maxEb) float32
+    deg: np.ndarray            # (P, own_cap) float32 in-degree, clamped >= 1
     send_idx: np.ndarray       # (P, P, maxS) local owned ids to send to q
     send_mask: np.ndarray      # (P, P, maxS)
     recv_pos: np.ndarray       # (P, P, maxS) local halo slot for recv from q
@@ -55,14 +79,37 @@ class PartitionedGraph:
     test_mask: np.ndarray      # (P, maxN)
 
     @property
+    def trash_row(self) -> int:
+        """The one sacrificial local row (== max_nodes - 1).  Padding in the
+        combined edge arrays and in ``recv_pos`` points here; the forward
+        keeps it all-zero at every layer, and :func:`build_partitioned_graph`
+        asserts no real edge or real recv slot ever references it."""
+        return self.max_nodes - 1
+
+    @property
+    def n_boundary(self) -> np.ndarray:
+        return self.n_own - self.n_int
+
+    @property
     def halo_bytes_per_layer(self) -> int:
         d = self.features.shape[-1]
         return int(self.n_halo.sum()) * d * self.features.dtype.itemsize
 
+    @property
+    def padded_wire_bytes_per_exchange(self) -> int:
+        """Bytes the padded static collective actually moves per layer
+        (all pair slots padded to maxS), vs the real payload of
+        :attr:`halo_bytes_per_layer`."""
+        d = self.features.shape[-1]
+        return int(np.prod(self.send_idx.shape)) * d * self.features.dtype.itemsize
+
     def summary(self) -> str:
         return (
-            f"P={self.num_parts} own={self.n_own.tolist()} halo={self.n_halo.tolist()} "
-            f"maxN={self.max_nodes} maxE={self.edge_src.shape[1]} "
+            f"P={self.num_parts} own={self.n_own.tolist()} "
+            f"int={self.n_int.tolist()} halo={self.n_halo.tolist()} "
+            f"maxN={self.max_nodes} ownCap={self.own_cap} "
+            f"maxE={self.edge_src.shape[1]} "
+            f"maxEi={self.int_src.shape[1]} maxEb={self.bnd_src.shape[1]} "
             f"halo_bytes/layer={self.halo_bytes_per_layer}"
         )
 
@@ -72,12 +119,15 @@ def build_partitioned_graph(
 ) -> PartitionedGraph:
     parts = np.asarray(parts)
     n = graph.num_nodes
-    owned = [np.flatnonzero(parts == p) for p in range(num_parts)]
+    P = num_parts
+    owned0 = [np.flatnonzero(parts == p) for p in range(P)]
 
-    # 1-hop halo: in-neighbour sources of owned nodes living elsewhere
-    halos, local_edges = [], []
-    for p in range(num_parts):
-        own = owned[p]
+    # per-partition edge lists (grouped per owned dst), 1-hop halo, and the
+    # interior/boundary classification: a node is BOUNDARY iff any of its
+    # in-neighbours lives on another partition
+    owned, halos, local_edges, n_int = [], [], [], np.zeros(P, np.int64)
+    for p in range(P):
+        own = owned0[p]
         src_all, dst_all = [], []
         for v in own:
             nbrs = graph.neighbors(v)
@@ -85,38 +135,49 @@ def build_partitioned_graph(
             dst_all.append(np.full(len(nbrs), v))
         src = np.concatenate(src_all) if src_all else np.zeros(0, np.int64)
         dst = np.concatenate(dst_all) if dst_all else np.zeros(0, np.int64)
-        halo = np.unique(src[parts[src] != p])
-        halos.append(halo)
+        remote = parts[src] != p
+        halos.append(np.unique(src[remote]))
+        is_bnd = np.zeros(n, dtype=bool)
+        is_bnd[dst[remote]] = True
+        interior = own[~is_bnd[own]]
+        boundary = own[is_bnd[own]]
+        owned.append(np.concatenate([interior, boundary]))
+        n_int[p] = len(interior)
         local_edges.append((src, dst))
 
     n_own = np.array([len(o) for o in owned])
     n_halo = np.array([len(h) for h in halos])
     max_nodes = int((n_own + n_halo).max()) + 1          # +1 trash row
+    own_cap = int(n_own.max())
     max_edges = max(1, int(max(len(e[0]) for e in local_edges)))
 
     d = graph.feature_dim
-    P = num_parts
     feats = np.zeros((P, max_nodes, d), dtype=np.float32)
     labels = np.full((P, max_nodes), -1, dtype=np.int64)
     gids = np.full((P, max_nodes), -1, dtype=np.int64)
-    e_src = np.full((P, max_edges), max_nodes - 1, dtype=np.int32)
-    e_dst = np.full((P, max_edges), max_nodes - 1, dtype=np.int32)
+    trash = max_nodes - 1
+    e_src = np.full((P, max_edges), trash, dtype=np.int32)
+    e_dst = np.full((P, max_edges), trash, dtype=np.int32)
     e_msk = np.zeros((P, max_edges), dtype=np.float32)
+    deg = np.ones((P, own_cap), dtype=np.float32)
     tr_m = np.zeros((P, max_nodes), dtype=bool)
     va_m = np.zeros((P, max_nodes), dtype=bool)
     te_m = np.zeros((P, max_nodes), dtype=bool)
 
-    # global -> (partition, local id)
+    # global -> (partition, local id); locals follow the [interior | boundary]
+    # owned order so boundary rows are the contiguous range [n_int, n_own)
     g2l = np.full(n, -1, dtype=np.int64)
     for p in range(P):
         g2l[owned[p]] = np.arange(n_own[p])
 
-    halo_l = [dict() for _ in range(P)]  # global id -> halo slot
+    halo_l = []            # (P,) global id -> halo slot, as a dense map
     for p in range(P):
-        for i, h in enumerate(halos[p]):
-            halo_l[p][int(h)] = n_own[p] + i
+        hmap = np.full(n, trash, dtype=np.int64)
+        hmap[halos[p]] = n_own[p] + np.arange(n_halo[p])
+        halo_l.append(hmap)
 
     tr, va, te = set(graph.train_idx), set(graph.val_idx), set(graph.test_idx)
+    split_src, split_dst = [], []   # per-partition local edges, dst-major
     for p in range(P):
         own = owned[p]
         feats[p, : n_own[p]] = graph.features[own]
@@ -130,14 +191,46 @@ def build_partitioned_graph(
             va_m[p, j] = int(v) in va
             te_m[p, j] = int(v) in te
 
+        # re-emit edges dst-major in the NEW local order (interior rows
+        # first), keeping each destination's in-neighbour order — that order
+        # is what makes split and combined aggregation bit-identical per row
         src, dst = local_edges[p]
-        loc_src = np.empty(len(src), dtype=np.int32)
-        for i, s in enumerate(src):
-            loc_src[i] = g2l[s] if parts[s] == p else halo_l[p][int(s)]
-        loc_dst = g2l[dst].astype(np.int32)
+        loc_src0 = np.where(parts[src] == p, g2l[src], halo_l[p][src]).astype(np.int64)
+        loc_dst0 = g2l[dst]
+        order = np.argsort(loc_dst0, kind="stable")
+        loc_src = loc_src0[order].astype(np.int32)
+        loc_dst = loc_dst0[order].astype(np.int32)
         e_src[p, : len(src)] = loc_src
         e_dst[p, : len(dst)] = loc_dst
         e_msk[p, : len(src)] = 1.0
+        split_src.append(loc_src)
+        split_dst.append(loc_dst)
+        counts = np.bincount(loc_dst, minlength=own_cap)[:own_cap]
+        deg[p] = np.maximum(counts, 1).astype(np.float32)
+
+    # destination-disjoint CSR shards: dst-major order puts all interior-dst
+    # edges (dst < n_int) ahead of the boundary-dst edges
+    n_int_edges = [int(np.searchsorted(split_dst[p], n_int[p]))
+                   for p in range(P)]
+    max_ei = max(1, max(n_int_edges))
+    max_eb = max(1, max(len(split_dst[p]) - n_int_edges[p] for p in range(P)))
+    # split pads: src -> trash row (guaranteed zero, so no mask multiply is
+    # needed on the hot path), dst -> the sacrificial segment row ``own_cap``
+    i_src = np.full((P, max_ei), trash, dtype=np.int32)
+    i_dst = np.full((P, max_ei), own_cap, dtype=np.int32)
+    i_msk = np.zeros((P, max_ei), dtype=np.float32)
+    b_src = np.full((P, max_eb), trash, dtype=np.int32)
+    b_dst = np.full((P, max_eb), own_cap, dtype=np.int32)
+    b_msk = np.zeros((P, max_eb), dtype=np.float32)
+    for p in range(P):
+        k = n_int_edges[p]
+        i_src[p, :k] = split_src[p][:k]
+        i_dst[p, :k] = split_dst[p][:k]
+        i_msk[p, :k] = 1.0
+        kb = len(split_src[p]) - k
+        b_src[p, :kb] = split_src[p][k:]
+        b_dst[p, :kb] = split_dst[p][k:]
+        b_msk[p, :kb] = 1.0
 
     # send lists: p sends owned node g to q whenever g is in q's halo
     send_lists = [[[] for _ in range(P)] for _ in range(P)]
@@ -146,11 +239,11 @@ def build_partitioned_graph(
         for g in halos[q]:
             p = int(parts[g])
             send_lists[p][q].append(int(g2l[g]))
-            recv_lists[q][p].append(halo_l[q][int(g)])
+            recv_lists[q][p].append(int(halo_l[q][g]))
     max_s = max(1, max(len(send_lists[p][q]) for p in range(P) for q in range(P)))
     s_idx = np.zeros((P, P, max_s), dtype=np.int32)
     s_msk = np.zeros((P, P, max_s), dtype=np.float32)
-    r_pos = np.full((P, P, max_s), max_nodes - 1, dtype=np.int32)  # pad -> trash
+    r_pos = np.full((P, P, max_s), trash, dtype=np.int32)  # pad -> trash
     for p in range(P):
         for q in range(P):
             ks = len(send_lists[p][q])
@@ -161,29 +254,82 @@ def build_partitioned_graph(
             if kr:
                 r_pos[p, q, :kr] = recv_lists[p][q]
 
+    # trash-row hygiene (the invariant the fast path relies on): no REAL
+    # edge endpoint and no REAL recv slot may reference the trash row, so it
+    # stays all-zero through every layer
+    assert not (e_src[e_msk > 0] == trash).any(), "real edge src hit trash row"
+    assert not (e_dst[e_msk > 0] == trash).any(), "real edge dst hit trash row"
+    assert not (i_src[i_msk > 0] == trash).any()
+    assert not (b_src[b_msk > 0] == trash).any()
+    # recv_pos[p, q] aligns with send_lists[q][p], i.e. with s_msk[q, p]
+    assert not (r_pos[np.swapaxes(s_msk, 0, 1) > 0] == trash).any(), \
+        "real recv slot hit trash row"
+
     return PartitionedGraph(
-        num_parts=P, n_own=n_own, n_halo=n_halo, max_nodes=max_nodes,
+        num_parts=P, n_own=n_own, n_int=n_int, n_halo=n_halo,
+        max_nodes=max_nodes, own_cap=own_cap,
         features=feats, labels=labels, edge_src=e_src, edge_dst=e_dst,
-        edge_mask=e_msk, send_idx=s_idx, send_mask=s_msk, recv_pos=r_pos,
+        edge_mask=e_msk, int_src=i_src, int_dst=i_dst, int_mask=i_msk,
+        bnd_src=b_src, bnd_dst=b_dst, bnd_mask=b_msk, deg=deg,
+        send_idx=s_idx, send_mask=s_msk, recv_pos=r_pos,
         global_ids=gids, train_mask=tr_m, val_mask=va_m, test_mask=te_m,
     )
 
 
 # ---------------------------------------------------------------------------
-# SPMD forward with per-layer halo exchange
+# halo exchange collectives
 # ---------------------------------------------------------------------------
 
-def _halo_exchange(h, send_idx, send_mask, recv_pos, axis_name: str):
-    """One all_to_all round: ship owned boundary rows, land them in halo
+def _exchange(sent, axis_name: str, ring_chunks: int = 0):
+    """Move ``sent[q]`` (this partition's rows for q) to partition q; returns
+    ``recv`` with ``recv[q]`` = the rows q sent here.
+
+    ``ring_chunks == 0``: one ``all_to_all``.  ``ring_chunks >= 1``: a P-1
+    step ``ppermute`` ring where each step's payload is split into that many
+    chunks, each an independent collective — on a real mesh chunk c+1's send
+    overlaps chunk c's landing/compute (DESIGN.md §5).  Both deliver
+    bit-identical buffers; only the schedule differs.
+    """
+    if ring_chunks <= 0:
+        return jax.lax.all_to_all(sent, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    P, S = sent.shape[0], sent.shape[1]
+    p = jax.lax.axis_index(axis_name)
+    nc = max(1, min(ring_chunks, S))
+    bounds = [round(c * S / nc) for c in range(nc + 1)]
+    # self block never carries payload (a node is never its own halo), but
+    # keeping it makes recv layout identical to the all_to_all's
+    recv = jnp.zeros_like(sent)
+    recv = jax.lax.dynamic_update_index_in_dim(
+        recv, jax.lax.dynamic_index_in_dim(sent, p, axis=0, keepdims=False),
+        p, axis=0)
+    for s in range(1, P):
+        perm = [(i, (i + s) % P) for i in range(P)]
+        blk = jax.lax.dynamic_index_in_dim(sent, (p + s) % P, axis=0,
+                                           keepdims=False)
+        got = [jax.lax.ppermute(blk[lo:hi], axis_name, perm)
+               for lo, hi in zip(bounds[:-1], bounds[1:])]
+        recv = jax.lax.dynamic_update_index_in_dim(
+            recv, got[0] if len(got) == 1 else jnp.concatenate(got),
+            (p - s) % P, axis=0)
+    return recv
+
+
+def _halo_exchange(h, send_idx, send_mask, recv_pos, axis_name: str,
+                   ring_chunks: int = 0):
+    """One exchange round: ship owned boundary rows, land them in halo
     slots.  h: (maxN, D); send_idx/mask/recv_pos: (P, maxS[, 1])."""
     out = h[send_idx] * send_mask[..., None]          # (P, maxS, D)
-    recv = jax.lax.all_to_all(out, axis_name, split_axis=0, concat_axis=0,
-                              tiled=False)
+    recv = _exchange(out, axis_name, ring_chunks)
     # recv[q] = rows partition q sent me; scatter into my halo slots
     flat_pos = recv_pos.reshape(-1)
     flat_val = recv.reshape(-1, h.shape[-1])
     return h.at[flat_pos].set(flat_val.astype(h.dtype))
 
+
+# ---------------------------------------------------------------------------
+# aggregation backends
+# ---------------------------------------------------------------------------
 
 def make_ref_mean_agg(max_nodes: int):
     """jnp segment-op mean aggregation over a shard's local edge list — the
@@ -198,6 +344,33 @@ def make_ref_mean_agg(max_nodes: int):
         return s / jnp.maximum(deg, 1.0)[:, None]
 
     return mean_agg
+
+
+def make_ref_split_agg(own_cap: int):
+    """jnp segment-op interior/boundary aggregation pair for the overlapped
+    forward.  Returns ``(agg_interior, agg_boundary)``; each maps
+    ``(h, shard) -> (own_cap, D)`` and is only meaningful on its own row
+    range (rows < n_int for interior, [n_int, n_own) for boundary) — the
+    caller selects per row with a bitwise-safe ``jnp.where``.
+
+    No mask multiply and no runtime degree pass: padding edges read the
+    guaranteed-zero trash row and land in the sacrificial segment row
+    ``own_cap`` (sliced off), and the static in-degree ships precomputed in
+    ``shard["deg"]`` — two of the wins the split layout buys even before
+    any exchange is overlapped.
+    """
+
+    def agg_interior(h, shard):
+        s = jax.ops.segment_sum(h[shard["int_src"]], shard["int_dst"],
+                                num_segments=own_cap + 1)[:own_cap]
+        return s / shard["deg"][:, None].astype(h.dtype)
+
+    def agg_boundary(h, shard):
+        s = jax.ops.segment_sum(h[shard["bnd_src"]], shard["bnd_dst"],
+                                num_segments=own_cap + 1)[:own_cap]
+        return s / shard["deg"][:, None].astype(h.dtype)
+
+    return agg_interior, agg_boundary
 
 
 def make_pallas_mean_agg(max_nodes: int, *, interpret: bool = True):
@@ -223,9 +396,43 @@ def make_pallas_mean_agg(max_nodes: int, *, interpret: bool = True):
     return mean_agg
 
 
+def make_pallas_split_agg(own_cap: int, *, interpret: bool = True):
+    """Pallas interior/boundary aggregation pair for the overlapped forward.
+
+    Each half's blocked structure covers only its own row range — interior
+    rows [0, n_int), boundary rows REBASED to [0, n_own - n_int) — and is
+    placed into the (own_cap, D) output through the row-range kernel entry
+    :func:`repro.kernels.segment_agg.segment_agg_rows`, so each pass pays
+    for ceil(range / BN) node blocks instead of the whole local space.
+    """
+    from ..kernels.segment_agg import segment_agg_rows
+
+    def agg_interior(h, shard):
+        msgs = h[shard["blk_int_src"].reshape(-1)]
+        out = segment_agg_rows(msgs, shard["blk_int_dst"],
+                               shard["blk_int_mask"], shard["blk_int_deg"],
+                               row_base=0, num_rows=own_cap,
+                               mean=True, interpret=interpret)
+        return out.astype(h.dtype)
+
+    def agg_boundary(h, shard):
+        msgs = h[shard["blk_bnd_src"].reshape(-1)]
+        out = segment_agg_rows(msgs, shard["blk_bnd_dst"],
+                               shard["blk_bnd_mask"], shard["blk_bnd_deg"],
+                               row_base=shard["n_int"], num_rows=own_cap,
+                               mean=True, interpret=interpret)
+        return out.astype(h.dtype)
+
+    return agg_interior, agg_boundary
+
+
+# ---------------------------------------------------------------------------
+# SPMD forwards
+# ---------------------------------------------------------------------------
+
 def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
                              axis_name: str = "data", agg=None):
-    """Build the per-shard 2-layer forward with halo exchange.
+    """Build the per-shard 2-layer SYNCHRONOUS forward with halo exchange.
 
     Returns ``fwd(params, shard) -> logits`` where ``shard`` is the
     per-partition slice of the stacked PartitionedGraph arrays; call it
@@ -237,6 +444,9 @@ def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
     ``agg(h, shard) -> (max_nodes, D)`` selects the aggregation backend;
     default is the jnp segment-op reference, the SPMD engine passes
     :func:`make_pallas_mean_agg` to put the Pallas kernel on the hot path.
+
+    Every layer's exchange fully serialises before any aggregation — the
+    baseline :func:`make_overlap_forward` is benchmarked against.
     """
     max_nodes = pg_meta["max_nodes"]
     mean_agg = agg if agg is not None else make_ref_mean_agg(max_nodes)
@@ -254,5 +464,75 @@ def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
         logits = (h1 @ params.layer2.w_self + agg1 @ params.layer2.w_neigh
                   + params.layer2.b)
         return logits
+
+    return fwd
+
+
+def make_overlap_forward(model: GraphSAGE, pg_meta: dict,
+                         axis_name: str = "data", agg_interior=None,
+                         agg_boundary=None, ring_chunks: int = 0):
+    """Build the per-shard 2-layer OVERLAPPED forward (DESIGN.md §5).
+
+    Per layer the program is issued in an order XLA's async collective
+    scheduler can overlap on a real mesh:
+
+      1. gather the send rows and START the exchange (all_to_all, or a
+         ``ring_chunks``-chunked ppermute ring),
+      2. interior aggregation + the self-term matmul — neither reads a halo
+         row, so both run while the exchange is in flight,
+      3. land the received rows in the halo slots,
+      4. boundary aggregation (the only halo-dependent compute), then the
+         bitwise-safe per-row select between the two halves.
+
+    Beyond the overlap, the split layout does strictly less work than the
+    synchronous forward: dense transforms and aggregation outputs cover the
+    ``own_cap`` owned rows instead of the full padded local space (halo
+    rows are recomputed by their OWNING partition and exchanged, never
+    transformed locally), degrees are static host constants, and padding
+    edges read the guaranteed-zero trash row so no edge mask multiply runs.
+    On owned rows the result is bit-for-bit identical to
+    :func:`make_distributed_forward` (tests/test_engine_parity.py); halo
+    and pad logit rows are NOT meaningful in either forward and differ
+    between the two.
+
+    Overlap is a no-op when P == 1 or every halo is empty: the exchange
+    carries nothing, the boundary ranges are empty, and the per-row select
+    resolves entirely to the interior half.
+    """
+    max_nodes = pg_meta["max_nodes"]
+    own_cap = pg_meta["own_cap"]
+    if agg_interior is None or agg_boundary is None:
+        agg_interior, agg_boundary = make_ref_split_agg(own_cap)
+    rows = np.arange(own_cap)[:, None]
+
+    def split_layer(h, shard, layer, activate: bool):
+        # (1) start the exchange first so everything until (3) overlaps it
+        sent = h[shard["send_idx"]] * shard["send_mask"][..., None]
+        recv = _exchange(sent, axis_name, ring_chunks)
+        # (2) halo-independent compute
+        agg_i = agg_interior(h, shard)
+        self_t = h[:own_cap] @ layer.w_self
+        # (3) land the halo rows
+        flat_pos = shard["recv_pos"].reshape(-1)
+        h = h.at[flat_pos].set(recv.reshape(-1, h.shape[-1]).astype(h.dtype))
+        # (4) boundary aggregation + bitwise-safe per-row select
+        agg_b = agg_boundary(h, shard)
+        agg = jnp.where(rows < shard["n_int"], agg_i, agg_b)
+        out = self_t + agg @ layer.w_neigh + layer.b
+        if activate:
+            out = jax.nn.relu(out)
+        return out
+
+    def embed(out):
+        # re-embed owned rows into the padded local space: halo slots are
+        # refreshed by the NEXT layer's exchange before anything reads them,
+        # and the trash row (maxN - 1 > own_cap - 1) stays zero
+        return jnp.zeros((max_nodes, out.shape[-1]), out.dtype).at[:own_cap].set(out)
+
+    def fwd(params: SAGEParams, shard: dict) -> jnp.ndarray:
+        h = shard["features"]
+        h1 = embed(split_layer(h, shard, params.layer1, activate=True))
+        logits = split_layer(h1, shard, params.layer2, activate=False)
+        return embed(logits)
 
     return fwd

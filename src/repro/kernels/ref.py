@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["segment_agg_ref", "attention_ref", "rmsnorm_ref"]
+__all__ = ["segment_agg_ref", "segment_agg_rows_ref", "attention_ref",
+           "rmsnorm_ref"]
 
 
 def segment_agg_ref(
@@ -22,6 +23,25 @@ def segment_agg_ref(
         jnp.ones_like(edge_dst, dtype=jnp.float32), edge_dst, num_segments=num_nodes
     )
     return (s.astype(jnp.float32) / jnp.maximum(deg, 1.0)[:, None]).astype(x.dtype)
+
+
+def segment_agg_rows_ref(
+    x: jnp.ndarray,           # (N, D) node features
+    edge_src: jnp.ndarray,    # (E,) indices into x
+    edge_dst: jnp.ndarray,    # (E,) REBASED destinations in [0, range_rows)
+    range_rows: int,          # rows covered by the sub-range
+    row_base: int,            # first output row of the sub-range
+    num_rows: int,            # total output rows
+    mean: bool = True,
+) -> jnp.ndarray:
+    """Oracle for the row-range kernel entry ``segment_agg_rows``: aggregate
+    a rebased destination sub-range and place it at ``row_base`` inside a
+    zero ``(num_rows, D)`` output."""
+    sub = segment_agg_ref(x, edge_src, edge_dst, range_rows, mean=mean)
+    out = jnp.zeros((num_rows, x.shape[-1]), x.dtype)
+    return jax.lax.dynamic_update_slice(
+        out, sub[: max(0, min(range_rows, num_rows - row_base))],
+        (row_base, 0))
 
 
 def attention_ref(

@@ -28,7 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 __all__ = ["EdgeBlocks", "build_edge_blocks", "segment_agg_pallas",
-           "segment_agg_blocks", "pallas_call_count", "reset_pallas_call_count"]
+           "segment_agg_blocks", "segment_agg_rows", "pallas_call_count",
+           "reset_pallas_call_count"]
 
 BN = 128    # destination nodes per block
 BD = 256    # feature lanes per block (multiple of 128)
@@ -164,6 +165,41 @@ def segment_agg_blocks(
         jnp.asarray(deg),
     )
     return out[:, :d]
+
+
+def segment_agg_rows(
+    msgs: jnp.ndarray,        # (num_blocks * BE, D) gathered edge messages
+    local_dst: jnp.ndarray,   # (num_blocks, BE) int32 in [0, BN)
+    mask: jnp.ndarray,        # (num_blocks, BE) float32
+    deg: jnp.ndarray,         # (num_blocks, BN) float32 (>=1 where real)
+    *,
+    row_base,                 # int or traced scalar: first output row
+    num_rows: int,            # static total output rows
+    mean: bool = True,
+    bd: int = BD,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Row-range (masked) kernel entry: aggregate a REBASED sub-range of the
+    node space and place it at ``row_base`` inside a zero ``(num_rows, D)``
+    output.
+
+    The block structure covers only the sub-range's rows (e.g. the boundary
+    rows ``[n_int, n_own)`` of a partition, rebased to start at 0), so the
+    kernel pays for ``ceil(range / BN)`` node blocks instead of the whole
+    local space; ``row_base`` may be a traced scalar, which is what lets the
+    per-partition boundary offset vary under ``vmap``/``shard_map``.  Rows
+    outside ``[row_base, row_base + num_blocks * BN)`` are exactly zero; an
+    empty range (all-pad blocks, the zero-boundary partition) yields an
+    all-zero output.
+    """
+    out = segment_agg_blocks(msgs, local_dst, mask, deg, mean=mean, bd=bd,
+                             interpret=interpret)
+    # place at the (possibly traced) row offset; the target is padded by the
+    # block rows so dynamic_update_slice never clamps for row_base <= num_rows
+    target = jnp.zeros((num_rows + out.shape[0], out.shape[1]), out.dtype)
+    target = jax.lax.dynamic_update_slice(
+        target, out, (jnp.asarray(row_base, jnp.int32), jnp.int32(0)))
+    return target[:num_rows]
 
 
 def segment_agg_pallas(

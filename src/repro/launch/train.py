@@ -56,6 +56,9 @@ def run_gnn(args) -> dict:
         seed=args.seed,
         engine_mode=args.engine,
         use_pallas_agg=not args.no_pallas_agg,
+        overlap_halo=args.overlap_halo,
+        ring_chunks=args.ring_chunks,
+        interpret=not args.no_interpret,
         async_personalize=args.async_personalize,
         double_buffer=not args.no_double_buffer,
         phase0_fraction=args.phase0_frac,
@@ -169,6 +172,17 @@ def main() -> int:
     g.add_argument("--no-pallas-agg", action="store_true",
                    help="use the jnp segment-op fallback instead of the "
                         "Pallas segment_agg kernel on the eval forward")
+    g.add_argument("--overlap-halo", action="store_true",
+                   help="boundary/interior split forward: overlap each "
+                        "layer's halo exchange with interior aggregation "
+                        "and restrict dense compute to owned rows")
+    g.add_argument("--ring-chunks", type=int, default=0,
+                   help="exchange as a ppermute ring with N chunks per "
+                        "step instead of one all_to_all (0 = all_to_all); "
+                        "only meaningful with --overlap-halo")
+    g.add_argument("--no-interpret", action="store_true",
+                   help="run Pallas kernels compiled (real TPU) instead of "
+                        "interpret mode; pair with --engine spmd on a mesh")
     g.add_argument("--async-personalize", action="store_true",
                    help="phase-1 with per-partition iteration budgets and "
                         "the CBS mini-epoch draw on device (no host NumPy "

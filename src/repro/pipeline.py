@@ -93,6 +93,11 @@ class EATConfig:
     centralized: bool = False             # 1 host, no partitioning (Table IV)
     engine_mode: str = "auto"             # auto | spmd | stacked | sequential
     use_pallas_agg: bool = True           # Pallas segment_agg on the eval path
+    # boundary/interior split forward: overlap each layer's halo exchange
+    # with interior aggregation + the self-term matmul (DESIGN.md §5)
+    overlap_halo: bool = False
+    ring_chunks: int = 0                  # chunked ppermute ring (0 = all_to_all)
+    interpret: bool = True                # Pallas interpret mode (False on TPU)
     # phase-1 runs fully on device: per-partition iteration budgets + the CBS
     # mini-epoch draw / fanout sampling / feature gather on the epoch trace
     # (no host NumPy on the mini-epoch path; DESIGN.md §4)
@@ -117,6 +122,12 @@ class EATResult:
     val_history: list[float] = field(default_factory=list)
     comm_grad_bytes: int = 0
     comm_halo_bytes: int = 0
+    # per-phase communication volume (bytes moved, not just seconds):
+    # gradient all-reduce traffic is phase-0 only; halo/remote-fetch
+    # traffic is attributed to the phase whose epochs incurred it
+    comm_halo_bytes_phase0: int = 0
+    comm_halo_bytes_phase1: int = 0
+    halo_bytes_per_layer: int = 0      # eval-forward exchange payload/layer
     engine_mode: str = "stacked"
     phase1_time_s: float = 0.0         # slowest host's cumulative phase-1 time
     phase1_epochs: int = 0
@@ -140,9 +151,13 @@ class EATResult:
             "partition_time_s": round(self.partition_time_s, 2),
             "comm_grad_mb": round(self.comm_grad_bytes / 1e6, 1),
             "comm_halo_mb": round(self.comm_halo_bytes / 1e6, 1),
+            "comm_halo_phase0_mb": round(self.comm_halo_bytes_phase0 / 1e6, 1),
+            "comm_halo_phase1_mb": round(self.comm_halo_bytes_phase1 / 1e6, 1),
+            "halo_bytes_per_layer": self.halo_bytes_per_layer,
             "phase1_time_s": round(self.phase1_time_s, 3),
             "phase1_epochs": self.phase1_epochs,
             "async_personalize": self.config.async_personalize,
+            "overlap_halo": self.config.overlap_halo,
         }
 
     def _label(self) -> str:
@@ -246,7 +261,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         model, loss_fn, opt, pg,
         hp=GPHyperParams(lambda_prox=cfg.lambda_prox),
         config=EngineConfig(mode=cfg.engine_mode,
-                            use_pallas_agg=cfg.use_pallas_agg))
+                            use_pallas_agg=cfg.use_pallas_agg,
+                            interpret=cfg.interpret,
+                            overlap_halo=cfg.overlap_halo,
+                            ring_chunks=cfg.ring_chunks))
     if verbose:
         print(f"engine[{engine.mode}] {pg.summary()}")
 
@@ -308,7 +326,8 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     sim_time = 0.0
     epoch_times: list[float] = []
     comm_grad = 0
-    comm_halo = 0
+    comm_halo_p0 = 0
+    comm_halo_p1 = 0
     best_global = params
     loss_hist: list[float] = []
     val_hist: list[float] = []
@@ -336,7 +355,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         params, opt_state, losses, val_micro, t_dev = engine.phase0_epoch(
             params, opt_state, batches)
         comm_grad += grad_bytes_per_sync * n_parts * iters
-        comm_halo += halo_bytes_per_epoch
+        comm_halo_p0 += halo_bytes_per_epoch
         host_time = epoch_host_times(t_host, t_dev)
         sim_time += float(host_time.max())
         epoch_times.append(float(host_time.max()))
@@ -410,7 +429,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                     jnp.asarray(budgets))
                 host_elapsed += np.where(
                     active_np, epoch_host_times(t_host, t_dev), 0.0)
-            comm_halo += halo_bytes_per_epoch
+            comm_halo_p1 += halo_bytes_per_epoch
             scores = np.asarray(val_micro)
             is_best = ctrl.record_phase1(scores)
             phase1_epochs += 1
@@ -458,7 +477,11 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         epoch_time_s=float(np.mean(epoch_times)) if epoch_times else 0.0,
         epochs_run=ctrl.epoch, personalize_start_epoch=personalize_start,
         loss_history=loss_hist, val_history=val_hist,
-        comm_grad_bytes=comm_grad, comm_halo_bytes=comm_halo,
+        comm_grad_bytes=comm_grad,
+        comm_halo_bytes=comm_halo_p0 + comm_halo_p1,
+        comm_halo_bytes_phase0=comm_halo_p0,
+        comm_halo_bytes_phase1=comm_halo_p1,
+        halo_bytes_per_layer=pg.halo_bytes_per_layer,
         engine_mode=engine.mode,
         phase1_time_s=phase1_time, phase1_epochs=phase1_epochs,
         host_draws_phase1=host_draws_p1,

@@ -167,6 +167,45 @@ def run_budget_parity(eng, seq, model, opt, samplers, make_batch, seed, dtype):
     return out
 
 
+def run_overlap_parity(pg, model, loss_fn, opt, samplers, make_batch, seed,
+                       dtype):
+    '''Boundary/interior split forward parity (the PR-3 tentpole):
+      1. overlapped stacked engine == overlapped sequential reference,
+         bit-for-bit through run_pair (phases + eval);
+      2. overlapped == SYNCHRONOUS forward bit-for-bit on owned rows
+         (micro-F1 over the owned masks must match exactly; halo/pad
+         logit rows are not meaningful in either forward);
+      3. the chunked ppermute ring delivers bit-identical results to the
+         single all_to_all exchange.'''
+    from repro.engine import SequentialReference, SPMDEngine
+    kw = dict(mode="stacked", use_pallas_agg=False, dtype=dtype)
+    engO = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                      EngineConfig(overlap_halo=True, **kw))
+    seqO = SequentialReference(model, loss_fn, opt, pg, GPHyperParams(),
+                               EngineConfig(overlap_halo=True, **kw))
+    d = {"seq_" + k: v for k, v in run_pair(
+        engO, seqO, model, opt, samplers, make_batch, seed, dtype).items()}
+
+    engS = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                      EngineConfig(**kw))
+    engR = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                      EngineConfig(overlap_halo=True, ring_chunks=3, **kw))
+    params = jax.tree.map(lambda x: jnp.asarray(x, dtype), model.init(seed))
+    pp = broadcast_to_partitions(params, P)
+    for split in ("val", "test"):
+        mS, prS = engS.evaluate(pp, split)
+        mO, prO = engO.evaluate(pp, split)
+        mR, prR = engR.evaluate(pp, split)
+        prS, prO, prR = map(np.asarray, (prS, prO, prR))
+        d[f"{split}_micro"] = float(np.abs(np.asarray(mS) - np.asarray(mO)).max())
+        d[f"{split}_pred_owned"] = int(sum(
+            (prS[p, : pg.n_own[p]] != prO[p, : pg.n_own[p]]).sum()
+            for p in range(P)))
+        d[f"{split}_ring_micro"] = float(np.abs(np.asarray(mR) - np.asarray(mO)).max())
+        d[f"{split}_ring_pred"] = int((prR != prO).sum())
+    return d
+
+
 def run_async_parity(eng, seq, g, host_train, model, opt, seed, dtype):
     '''Fully-on-device phase-1 (device CBS draw + fanout + gather inside the
     fused step) vs the sequential reference running the SAME PRNG programs.'''
@@ -215,6 +254,8 @@ out["budget"] = run_budget_parity(eng, seq, model, opt, samplers, make_batch,
                                   0, jnp.float64)
 out["async"] = run_async_parity(eng, seq, g, host_train, model, opt, 0,
                                 jnp.float64)
+out["overlap"] = run_overlap_parity(pg, model, loss_fn, opt, samplers,
+                                    make_batch, 0, jnp.float64)
 print("RESULTS", json.dumps(out))
 """
 )
@@ -247,6 +288,15 @@ def test_async_device_sampling_parity_fp64(fp64_shared):
     """The fully-on-device async phase-1 == sequential reference running the
     same per-partition PRNG programs, bit-for-bit in fp64."""
     assert all(v == 0 for v in fp64_shared["async"].values()), fp64_shared["async"]
+
+
+def test_overlap_split_forward_parity_fp64(fp64_shared):
+    """The boundary/interior split forward: overlapped engine == overlapped
+    sequential reference bit-for-bit; overlapped == synchronous forward
+    bit-for-bit on owned rows (micro-F1 and owned predictions); the chunked
+    ppermute ring == the all_to_all exchange bit-for-bit."""
+    assert all(v == 0 for v in fp64_shared["overlap"].values()), \
+        fp64_shared["overlap"]
 
 
 # --------------------------------------------------------------------------
@@ -429,3 +479,64 @@ def test_segment_agg_ragged_degree_sweep(kind, seed, mean):
     np.testing.assert_allclose(got, want, atol=tol, rtol=2e-4)
     if mean:
         assert np.abs(got[deg == 0]).max() == 0.0  # empty rows stay zero
+
+
+# --------------------------------------------------------------------------
+# row-range (masked) segment_agg variant: the overlapped forward's boundary
+# pass — ragged sub-ranges incl. the zero-boundary / all-boundary partitions
+# --------------------------------------------------------------------------
+
+def _padded_blocks(blocks):
+    """Pad an EdgeBlocks to >= 1 block (the zero-range case), the same
+    guard engine.stacking applies when stacking split structures."""
+    from repro.kernels.segment_agg import BN, EdgeBlocks
+
+    if blocks.num_blocks:
+        return blocks
+    be = blocks.edges_per_block
+    return EdgeBlocks(
+        num_nodes=0, num_blocks=1, edges_per_block=be,
+        src=np.zeros((1, be), np.int32), local_dst=np.zeros((1, be), np.int32),
+        mask=np.zeros((1, be), np.float32), deg=np.ones((1, BN), np.float32))
+
+
+@pytest.mark.parametrize("split_kind",
+                         ["zero_boundary", "all_boundary", "mixed",
+                          "unaligned_tail"])
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("mean", [True, False])
+def test_segment_agg_rows_ragged_range_sweep(split_kind, seed, mean):
+    """``segment_agg_rows`` (blocked aggregation over a REBASED destination
+    sub-range, placed at a row offset) == the jnp row-range oracle, across
+    ragged range positions: empty range (zero-boundary partition), the full
+    node space (all-boundary), and block-unaligned interior offsets."""
+    import zlib
+
+    from repro.kernels import ref
+    from repro.kernels.segment_agg import build_edge_blocks, segment_agg_rows
+
+    rng = np.random.default_rng([seed, zlib.crc32(split_kind.encode())])
+    n = 300
+    n_int = {"zero_boundary": n, "all_boundary": 0,
+             "mixed": int(rng.integers(1, n - 1)),
+             "unaligned_tail": n - 37}[split_kind]
+    range_rows = n - n_int
+    deg = rng.integers(0, 8, range_rows) if range_rows else np.zeros(0, np.int64)
+    indptr = np.zeros(range_rows + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    indices = rng.integers(0, n, int(indptr[-1])).astype(np.int64)
+    x = jnp.asarray(rng.normal(0, 1, (n, 24)).astype(np.float32))
+
+    blocks = _padded_blocks(build_edge_blocks(indptr, indices))
+    msgs = x[jnp.asarray(blocks.src.reshape(-1))]
+    got = np.asarray(segment_agg_rows(
+        msgs, jnp.asarray(blocks.local_dst), jnp.asarray(blocks.mask),
+        jnp.asarray(blocks.deg), row_base=n_int, num_rows=n, mean=mean))
+    want = np.asarray(ref.segment_agg_rows_ref(
+        x, jnp.asarray(indices),
+        jnp.asarray(np.repeat(np.arange(range_rows), deg)),
+        max(1, range_rows), n_int, n, mean=mean))
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+    # rows outside [row_base, n) are exactly zero — the guarantee the
+    # bitwise-safe per-row select in the overlapped forward relies on
+    assert np.abs(got[:n_int]).max(initial=0.0) == 0.0

@@ -109,6 +109,69 @@ def test_partitioned_graph_invariants(tiny):
         assert (pg.edge_dst[p][real] < pg.n_own[p]).all()
 
 
+def test_interior_boundary_split_invariants(tiny):
+    """The [interior | boundary | halo | pad] layout (DESIGN.md §5):
+    interior rows have NO halo in-neighbour, every boundary row has one,
+    the destination-disjoint CSR shards exactly re-partition the combined
+    edge list with per-row order preserved, and the static degree matches
+    the combined edge mask."""
+    g = tiny
+    for method in ("ew", "random"):
+        r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                            method=method, seed=0)
+        pg = build_partitioned_graph(g, r.parts, 4)
+        assert pg.own_cap == pg.n_own.max()
+        for p in range(4):
+            real = pg.edge_mask[p] > 0
+            src, dst = pg.edge_src[p][real], pg.edge_dst[p][real]
+            halo_src = src >= pg.n_own[p]
+            # classification: boundary rows = exactly those with a halo src
+            bnd_rows = np.unique(dst[halo_src])
+            assert (bnd_rows >= pg.n_int[p]).all(), "interior row has halo src"
+            expect_bnd = np.zeros(pg.max_nodes, bool)
+            expect_bnd[bnd_rows] = True
+            assert expect_bnd[pg.n_int[p]:pg.n_own[p]].all(), \
+                "boundary row without halo src"
+            # split shards re-partition the combined list, order preserved
+            i_real = pg.int_mask[p] > 0
+            b_real = pg.bnd_mask[p] > 0
+            isrc, idst = pg.int_src[p][i_real], pg.int_dst[p][i_real]
+            bsrc, bdst = pg.bnd_src[p][b_real], pg.bnd_dst[p][b_real]
+            assert (idst < pg.n_int[p]).all() and (isrc < pg.n_own[p]).all()
+            assert (bdst >= pg.n_int[p]).all() and (bdst < pg.n_own[p]).all()
+            np.testing.assert_array_equal(np.concatenate([isrc, bsrc]), src)
+            np.testing.assert_array_equal(np.concatenate([idst, bdst]), dst)
+            # static degree == runtime mask degree, clamped
+            counts = np.bincount(dst, minlength=pg.own_cap)[:pg.own_cap]
+            np.testing.assert_array_equal(pg.deg[p], np.maximum(counts, 1))
+
+
+def test_trash_row_is_explicit_and_unreferenced(tiny):
+    """The trash-row convention is named state: ``trash_row`` is the last
+    local row, real edges and real recv slots never reference it, and all
+    padding does — so it stays all-zero through every layer."""
+    g = tiny
+    r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                        method="ew", seed=0)
+    pg = build_partitioned_graph(g, r.parts, 4)
+    assert pg.trash_row == pg.max_nodes - 1
+    assert (pg.n_own + pg.n_halo <= pg.trash_row).all()
+    for p in range(4):
+        real = pg.edge_mask[p] > 0
+        assert (pg.edge_src[p][real] != pg.trash_row).all()
+        assert (pg.edge_dst[p][real] != pg.trash_row).all()
+        assert (pg.edge_src[p][~real] == pg.trash_row).all()
+        assert (pg.edge_dst[p][~real] == pg.trash_row).all()
+        # features/labels on the trash row are zero / ignore-label
+        assert np.abs(pg.features[p, pg.trash_row]).max() == 0.0
+        assert pg.labels[p, pg.trash_row] == -1
+    # recv_pos[p, q] aligns with send_mask[q, p]; real slots land in halo
+    # space, pad slots land on the trash row
+    recv_real = np.swapaxes(pg.send_mask, 0, 1) > 0
+    assert (pg.recv_pos[recv_real] != pg.trash_row).all()
+    assert (pg.recv_pos[~recv_real] == pg.trash_row).all()
+
+
 def test_ew_reduces_halo_volume(tiny):
     """The paper's comm claim: EW cut < random cut => smaller halo."""
     g = tiny
