@@ -7,9 +7,12 @@
 # fails the build.
 #
 #   scripts/ci.sh          tier-1 (-m "not slow") + baseline delta + 30s gate
+#   scripts/ci.sh grad     grad-parity smoke only: jax.grad through the
+#                          custom-VJP Pallas aggregation op vs the jnp
+#                          reference, with fwd+bwd kernel-staging evidence
 #   scripts/ci.sh slow     the -m slow stage (kernel sweeps, multi-device
 #                          subprocess compiles, the full fp64 parity matrix)
-#   scripts/ci.sh all      both stages
+#   scripts/ci.sh all      tier-1 (incl. the grad smoke) + slow
 set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -24,6 +27,47 @@ mode=${1:-tier1}
 if [ "$mode" = "slow" ]; then
     exec python -m pytest -m slow -q
 fi
+
+# ---- grad-parity smoke -----------------------------------------------------
+# Fast standalone witness (also the first step of every tier-1 run): jax.grad
+# through segment_mean_op must match the jnp reference AND stage the Pallas
+# kernel in BOTH directions of the pass.  This intentionally duplicates
+# assertions that tests/test_kernels.py makes again minutes later — it is
+# the ~10 s FAIL-FAST in front of the ~25 min suite, and `scripts/ci.sh
+# grad` gives the same witness without pytest at all.
+grad_smoke() {
+    python - <<'PY'
+import numpy as np, jax, jax.numpy as jnp
+from repro.kernels import ops, ref
+from repro.kernels import segment_agg as sa
+
+rng = np.random.default_rng(0)
+n, d = 200, 32
+deg = rng.integers(0, 6, n); deg[rng.random(n) < 0.3] = 0
+indptr = np.zeros(n + 1, np.int64); np.cumsum(deg, out=indptr[1:])
+indices = rng.integers(0, n, int(indptr[-1])).astype(np.int64)
+x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+w = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+agg = ops.make_segment_agg(indptr, indices)
+src = jnp.asarray(indices)
+dst = jnp.asarray(np.repeat(np.arange(n), deg))
+before = sa.pallas_call_count()
+g_op = jax.grad(lambda x: (agg(x) * w).sum())(x)
+staged = sa.pallas_call_count() - before
+g_ref = jax.grad(lambda x: (ref.segment_agg_ref(x, src, dst, n) * w).sum())(x)
+np.testing.assert_allclose(np.asarray(g_op), np.asarray(g_ref),
+                           atol=1e-5, rtol=1e-5)
+assert staged >= 2, f"fwd+bwd kernels not both staged ({staged})"
+print(f"grad-parity smoke OK (pallas calls staged in grad trace: {staged})")
+PY
+}
+
+if [ "$mode" = "grad" ]; then
+    grad_smoke || exit 1
+    exit 0
+fi
+
+grad_smoke || { echo "REGRESSION: grad-parity smoke failed"; exit 1; }
 
 out=$(python -m pytest -m "not slow" -q --durations=0 2>&1)
 pytest_status=$?

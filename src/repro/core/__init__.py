@@ -11,6 +11,7 @@ from .gp import (
     GPScheduleConfig,
     broadcast_to_partitions,
     loss_flattened,
+    make_fullgraph_loss_fn,
     make_generalize_step,
     make_personalize_partition_step,
     make_personalize_step,
@@ -21,7 +22,8 @@ __all__ = [
     "partition_graph", "PartitionResult", "assign_edge_weights", "metis_kway",
     "CBSampler", "cbs_probabilities",
     "GPController", "GPScheduleConfig", "GPHyperParams", "EarlyStopper",
-    "loss_flattened", "make_generalize_step", "make_personalize_partition_step",
+    "loss_flattened", "make_fullgraph_loss_fn", "make_generalize_step",
+    "make_personalize_partition_step",
     "make_personalize_step",
     "broadcast_to_partitions",
 ]

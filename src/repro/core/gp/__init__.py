@@ -1,6 +1,7 @@
 from .schedule import EarlyStopper, GPController, GPScheduleConfig, loss_flattened
 from .trainer import (
     GPHyperParams,
+    make_fullgraph_loss_fn,
     make_generalize_step,
     make_personalize_partition_step,
     make_personalize_step,
@@ -9,7 +10,8 @@ from .trainer import (
 
 __all__ = [
     "EarlyStopper", "GPController", "GPScheduleConfig", "loss_flattened",
-    "GPHyperParams", "make_generalize_step", "make_personalize_partition_step",
+    "GPHyperParams", "make_fullgraph_loss_fn", "make_generalize_step",
+    "make_personalize_partition_step",
     "make_personalize_step",
     "broadcast_to_partitions",
 ]

@@ -30,6 +30,7 @@ from ...train.optim import OptState, apply_updates
 __all__ = [
     "GPHyperParams",
     "make_generalize_step",
+    "make_fullgraph_loss_fn",
     "make_personalize_partition_step",
     "make_personalize_step",
     "broadcast_to_partitions",
@@ -68,6 +69,34 @@ def make_generalize_step(
         return params, opt_state, loss
 
     return step
+
+
+def make_fullgraph_loss_fn(fwd: Callable, loss: str = "ce",
+                           focal_gamma: float = 2.0) -> LossFn:
+    """Phase-0 loss over a FULL-GRAPH batch instead of a sampled minibatch.
+
+    ``fwd(params, shard) -> (rows, C)`` is a distributed forward (halo
+    exchange + the differentiable blocked aggregation op); the batch is the
+    partition's graph shard itself: ``{"shard", "labels", "train_mask"}``.
+    The returned ``loss_fn(params, batch)`` plugs into the exact same
+    machinery as the sampled loss (:func:`make_generalize_step`, the
+    engines' phase-0 scans), which is what makes full-graph training a MODE
+    of the existing pipeline rather than a separate trainer: gradients flow
+    through the halo exchange's own VJP into remote partitions' embeddings
+    and through the aggregation op's custom VJP (the transpose-blocked
+    kernel) into local ones.
+    """
+    from ...train.losses import cross_entropy_loss, focal_loss
+
+    def loss_fn(params: PyTree, batch: Any) -> jnp.ndarray:
+        logits = fwd(params, batch["shard"])
+        if loss == "focal":
+            return focal_loss(logits, batch["labels"], gamma=focal_gamma,
+                              mask=batch["train_mask"])
+        return cross_entropy_loss(logits, batch["labels"],
+                                  mask=batch["train_mask"])
+
+    return loss_fn
 
 
 def make_personalize_partition_step(

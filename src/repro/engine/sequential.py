@@ -43,6 +43,7 @@ class SequentialReference:
         self.max_nodes = pg.max_nodes
         self.own_cap = pg.own_cap
         self.overlap = bool(getattr(config, "overlap_halo", False))
+        self._fg_loss_kind = getattr(config, "fg_loss", "ce")
         self.features = jnp.asarray(pg.features, f)        # (P, maxN, D)
         self.send_idx = jnp.asarray(pg.send_idx)
         self.send_mask = jnp.asarray(pg.send_mask, f)
@@ -203,6 +204,57 @@ class SequentialReference:
             stacked = jax.tree.map(lambda *gs: jnp.stack(gs), *grads)
             params, opt_state = self._apply_avg(params, opt_state, stacked)
             all_losses.append(jnp.stack(losses))
+        jax.block_until_ready(params)
+        dt = time.perf_counter() - t0
+        val_micro, _ = self._eval([params] * P, "val")
+        return params, opt_state, jnp.stack(all_losses), val_micro, dt
+
+    def phase0_fullgraph_epoch(self, params, opt_state, iters: int = 1):
+        """Full-graph phase-0, legibly: partition p's loss is the train-mask
+        cross-entropy of ITS rows of the full multi-partition forward (the
+        same Python-loop forward `_eval` uses), differentiated with plain
+        ``jax.grad`` — the parity oracle for the engines' fused
+        ``value_and_grad`` through the halo exchange and the aggregation
+        op's custom VJP."""
+        import time
+
+        from functools import partial
+
+        from ..train.losses import cross_entropy_loss, focal_loss
+
+        P = self.num_parts
+        if not hasattr(self, "_fg_step"):
+            labels = self.labels
+            train_m = jnp.asarray(self.masks["train"])
+            base_loss = (partial(focal_loss, gamma=2.0)
+                         if self._fg_loss_kind == "focal"
+                         else cross_entropy_loss)
+
+            def loss_p(prm, p):
+                logits = self._full_forward([prm] * P)
+                return base_loss(logits[p], labels[p], mask=train_m[p])
+
+            @jax.jit
+            def fg_step(params, opt_state):
+                losses, grads = [], []
+                for p in range(P):
+                    l, g = jax.value_and_grad(loss_p)(params, p)
+                    losses.append(l)
+                    grads.append(g)
+                stacked = jax.tree.map(lambda *gs: jnp.stack(gs), *grads)
+                # inner jit inlines under this trace: same fused arithmetic
+                params, opt_state = self._apply_avg(params, opt_state, stacked)
+                return params, opt_state, jnp.stack(losses)
+
+            self._fg_step = fg_step
+
+        # compile warm-up outside the timed window (pure, result discarded)
+        jax.block_until_ready(self._fg_step(params, opt_state))
+        t0 = time.perf_counter()
+        all_losses = []
+        for _ in range(iters):
+            params, opt_state, losses = self._fg_step(params, opt_state)
+            all_losses.append(losses)
         jax.block_until_ready(params)
         dt = time.perf_counter() - t0
         val_micro, _ = self._eval([params] * P, "val")

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..core.gp.trainer import (GPHyperParams,
+from ..core.gp.trainer import (GPHyperParams, make_fullgraph_loss_fn,
                                make_personalize_partition_step,
                                make_personalize_step)
 from ..graph.distributed import (PartitionedGraph, make_distributed_forward,
@@ -47,8 +47,8 @@ from ..graph.distributed import (PartitionedGraph, make_distributed_forward,
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 from .compat import shard_map_compat
-from .stacking import (build_stacked_blocks, build_stacked_split_blocks,
-                       stack_pytrees)
+from .stacking import (build_stacked_split_vjp_blocks,
+                       build_stacked_vjp_blocks, stack_pytrees)
 
 __all__ = ["AXIS", "EngineConfig", "SPMDEngine", "stack_epoch_batches"]
 
@@ -68,6 +68,9 @@ class EngineConfig:
     # 0 = one all_to_all; >= 1 = ppermute ring with that many chunks per
     # step (per-chunk sends interleave on a real mesh; bit-identical data)
     ring_chunks: int = 0
+    # objective of the FULL-GRAPH phase-0 mode (the sampled path's loss is
+    # the loss_fn the engine is constructed with): "ce" | "focal"
+    fg_loss: str = "ce"
 
 
 def _resolve_mode(mode: str, num_parts: int) -> str:
@@ -147,22 +150,20 @@ class SPMDEngine:
             "send_mask": jnp.asarray(pg.send_mask, f),
             "recv_pos": jnp.asarray(pg.recv_pos),
         }
+        def _as_blk(d: dict) -> dict:
+            # one nested pytree per segment_mean_op call site: int arrays
+            # stay int32, float structure follows the feature dtype
+            return {k: jnp.asarray(v, f) if v.dtype == np.float32
+                    else jnp.asarray(v) for k, v in d.items()}
+
         if config.overlap_halo:
             # split forward state: the per-partition interior row count plus
             # ONE aggregation backend's structures (the other is never read)
             self.shards["n_int"] = jnp.asarray(pg.n_int, jnp.int32)
             if config.use_pallas_agg:
-                bi, bb = build_stacked_split_blocks(pg)
-                self.shards.update({
-                    "blk_int_src": jnp.asarray(bi.src),
-                    "blk_int_dst": jnp.asarray(bi.local_dst),
-                    "blk_int_mask": jnp.asarray(bi.mask, f),
-                    "blk_int_deg": jnp.asarray(bi.deg, f),
-                    "blk_bnd_src": jnp.asarray(bb.src),
-                    "blk_bnd_dst": jnp.asarray(bb.local_dst),
-                    "blk_bnd_mask": jnp.asarray(bb.mask, f),
-                    "blk_bnd_deg": jnp.asarray(bb.deg, f),
-                })
+                bi, bb = build_stacked_split_vjp_blocks(pg)
+                self.shards["blk_int"] = _as_blk(bi)
+                self.shards["blk_bnd"] = _as_blk(bb)
             else:
                 self.shards.update({
                     "int_src": jnp.asarray(pg.int_src),
@@ -178,13 +179,7 @@ class SPMDEngine:
                 "edge_mask": jnp.asarray(pg.edge_mask, f),
             })
             if config.use_pallas_agg:
-                blocks = build_stacked_blocks(pg)
-                self.shards.update({
-                    "blk_src": jnp.asarray(blocks.src),
-                    "blk_dst": jnp.asarray(blocks.local_dst),
-                    "blk_mask": jnp.asarray(blocks.mask, f),
-                    "blk_deg": jnp.asarray(blocks.deg, f),
-                })
+                self.shards["blk"] = _as_blk(build_stacked_vjp_blocks(pg))
         self.labels = jnp.asarray(pg.labels)
         self.masks = {
             "train": jnp.asarray(pg.train_mask),
@@ -204,6 +199,9 @@ class SPMDEngine:
                    if config.use_pallas_agg else make_ref_mean_agg(pg.max_nodes))
             self.fwd = make_distributed_forward(model, meta, axis_name=AXIS,
                                                 agg=agg)
+        # full-graph phase-0: value_and_grad straight through self.fwd (the
+        # halo-exchange forward whose aggregation op carries a custom VJP)
+        self._fg_loss = make_fullgraph_loss_fn(self.fwd, loss=config.fg_loss)
         self._pstep = make_personalize_step(loss_fn, optimizer, hp)
         self._device_sampler = None
         self._sampler_gen = 0
@@ -261,6 +259,56 @@ class SPMDEngine:
         (params, opt_state), losses = jax.lax.scan(
             one_iter, (params, opt_state), batches)
         return params, opt_state, losses
+
+    def _fg_batch(self):
+        """The full-graph 'batch': every partition's graph shard + labels +
+        train mask, (P, ...)-stacked like any minibatch pytree."""
+        return {"shard": self.shards, "labels": self.labels,
+                "train_mask": self.masks["train"]}
+
+    def _phase0_fullgraph_stacked(self, params, opt_state, iters: int):
+        num_parts = self.num_parts
+        batch = self._fg_batch()
+
+        def one_iter(carry, _):
+            params, opt_state = carry
+            # vmap with the collective axis bound: each partition's loss
+            # differentiates THROUGH the halo exchange, so grads[p] includes
+            # the paths via embeddings p shipped to other partitions
+            losses, grads = jax.vmap(
+                jax.value_and_grad(self._fg_loss), in_axes=(None, 0),
+                axis_name=AXIS)(params, batch)
+            grads = jax.tree.map(lambda g: jnp.sum(g, axis=0) / num_parts, grads)
+            updates, opt_state = self.optimizer.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return (params, opt_state), losses
+
+        (params, opt_state), losses = jax.lax.scan(
+            one_iter, (params, opt_state), None, length=iters)
+        return params, opt_state, losses
+
+    def _phase0_fullgraph_spmd(self, params, opt_state, iters: int):
+        def shard_fn(params, opt_state, shard_s, labels_s, mask_s):
+            batch = {"shard": jax.tree.map(lambda x: x[0], shard_s),
+                     "labels": labels_s[0], "train_mask": mask_s[0]}
+
+            def one(carry, _):
+                p, o = carry
+                loss, grads = jax.value_and_grad(self._fg_loss)(p, batch)
+                grads = jax.lax.pmean(grads, AXIS)
+                updates, o = self.optimizer.update(grads, o, p)
+                return (apply_updates(p, updates), o), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                one, (params, opt_state), None, length=iters)
+            return params, opt_state, losses[:, None]
+
+        fn = shard_map_compat(
+            shard_fn, self._mesh,
+            in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS)),
+            out_specs=(P(), P(), P(None, AXIS)))
+        return fn(params, opt_state, self.shards, self.labels,
+                  self.masks["train"])
 
     def _phase1_stacked(self, pparams, popt, batches, global_params, budgets):
         def one_iter(carry, xs):
@@ -433,6 +481,22 @@ class SPMDEngine:
         fn = self._compiled("phase0", impl, params, opt_state, batches)
         (params, opt_state, losses), dt = self._timed(
             fn, params, opt_state, batches)
+        val_micro, _ = self.evaluate(params, "val", per_partition_params=False)
+        return params, opt_state, losses, val_micro, dt
+
+    def phase0_fullgraph_epoch(self, params, opt_state, iters: int = 1):
+        """Full-graph phase-0 epoch: ``iters`` full-batch steps whose
+        ``value_and_grad`` runs straight through the distributed forward —
+        per-layer halo exchange, the differentiable Pallas aggregation op
+        (forward AND transpose kernels on the traced path when
+        ``use_pallas_agg=True``) and the cross-partition gradient mean.  The
+        centralized (P=1) configuration is the paper's Table IV baseline at
+        full-graph scale; P>1 is per-partition full-graph training."""
+        impl = (self._phase0_fullgraph_spmd if self.mode == "spmd"
+                else self._phase0_fullgraph_stacked)
+        fn = self._compiled(f"phase0_fg-{iters}",
+                            lambda p, o: impl(p, o, iters), params, opt_state)
+        (params, opt_state, losses), dt = self._timed(fn, params, opt_state)
         val_micro, _ = self.evaluate(params, "val", per_partition_params=False)
         return params, opt_state, losses, val_micro, dt
 

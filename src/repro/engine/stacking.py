@@ -16,10 +16,11 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..graph.distributed import PartitionedGraph
-from ..kernels.segment_agg import BEC, BN, build_edge_blocks
+from ..kernels.segment_agg import (BEC, BN, build_edge_blocks,
+                                   build_transpose_blocks)
 
-__all__ = ["StackedBlocks", "build_stacked_blocks", "build_stacked_split_blocks",
-           "stack_pytrees"]
+__all__ = ["StackedBlocks", "build_stacked_vjp_blocks",
+           "build_stacked_split_vjp_blocks", "stack_pytrees"]
 
 
 @dataclass(frozen=True)
@@ -44,29 +45,6 @@ def _local_csr(pg: PartitionedGraph, p: int) -> tuple[np.ndarray, np.ndarray]:
     indptr = np.zeros(pg.max_nodes + 1, dtype=np.int64)
     np.cumsum(counts, out=indptr[1:])
     return indptr, src
-
-
-def build_stacked_blocks(pg: PartitionedGraph, bn: int = BN,
-                         bec: int = BEC) -> StackedBlocks:
-    per_part = []
-    for p in range(pg.num_parts):
-        indptr, indices = _local_csr(pg, p)
-        per_part.append(build_edge_blocks(indptr, indices, bn=bn, bec=bec))
-
-    nb = max(b.num_blocks for b in per_part)
-    be = max(b.edges_per_block for b in per_part)
-    P = pg.num_parts
-    src = np.zeros((P, nb, be), dtype=np.int32)
-    ldst = np.zeros((P, nb, be), dtype=np.int32)
-    mask = np.zeros((P, nb, be), dtype=np.float32)
-    deg = np.ones((P, nb, bn), dtype=np.float32)
-    for p, b in enumerate(per_part):
-        src[p, : b.num_blocks, : b.edges_per_block] = b.src
-        ldst[p, : b.num_blocks, : b.edges_per_block] = b.local_dst
-        mask[p, : b.num_blocks, : b.edges_per_block] = b.mask
-        deg[p, : b.num_blocks] = b.deg
-    return StackedBlocks(num_blocks=nb, edges_per_block=be,
-                         src=src, local_dst=ldst, mask=mask, deg=deg)
 
 
 def _stack_blocks(per_part, num_parts: int, bn: int) -> StackedBlocks:
@@ -101,30 +79,66 @@ def _sub_csr(src: np.ndarray, dst: np.ndarray, mask: np.ndarray,
     return indptr, s
 
 
-def build_stacked_split_blocks(pg: PartitionedGraph, bn: int = BN,
-                               bec: int = BEC):
-    """Blocked structures for the overlapped forward's interior/boundary
-    aggregation split (DESIGN.md §5).
+def _stack_vjp_dict(fwd_list, bwd_list, num_parts: int, bn: int) -> dict:
+    """Pair per-partition forward + transpose EdgeBlocks into the flat
+    ``segment_mean_op`` blocks dict, each side padded fleet-wide."""
+    f = _stack_blocks(fwd_list, num_parts, bn)
+    b = _stack_blocks(bwd_list, num_parts, bn)
+    return {"src": f.src, "dst": f.local_dst, "mask": f.mask, "deg": f.deg,
+            "t_src": b.src, "t_dst": b.local_dst, "t_mask": b.mask}
 
-    Returns ``(interior, boundary)`` :class:`StackedBlocks`.  Each half
-    blocks ONLY its own row range — interior rows ``[0, n_int)``, boundary
-    rows rebased to ``[0, n_own - n_int)`` — so each kernel grid scales
-    with its row count, and ``segment_agg_rows`` places the halves at row
-    0 and at the partition's ``n_int`` offset respectively.  A
-    zero-boundary (or zero-interior) partition contributes all-pad blocks
-    that aggregate to exact zeros.
-    """
-    ints, bnds = [], []
+
+def build_stacked_vjp_blocks(pg: PartitionedGraph, bn: int = BN,
+                             bec: int = BEC) -> dict:
+    """Stacked paired forward/transpose block structure for the whole-space
+    aggregation (``segment_mean_op`` over all ``max_nodes`` local rows):
+    the forward is dst-blocked CSR, the transpose is the CSC-ordered mirror
+    over the same edges (grad flows dst -> src, covering owned AND halo
+    source rows so the halo exchange's VJP can route gradient back to the
+    owning partition)."""
+    fwds, bwds = [], []
     for p in range(pg.num_parts):
+        indptr, indices = _local_csr(pg, p)
+        fwds.append(build_edge_blocks(indptr, indices, bn=bn, bec=bec))
+        real = pg.edge_mask[p] > 0
+        bwds.append(build_transpose_blocks(
+            pg.edge_src[p][real], pg.edge_dst[p][real], pg.max_nodes,
+            bn=bn, bec=bec))
+    return _stack_vjp_dict(fwds, bwds, pg.num_parts, bn)
+
+
+def build_stacked_split_vjp_blocks(pg: PartitionedGraph, bn: int = BN,
+                                   bec: int = BEC) -> tuple[dict, dict]:
+    """The overlapped forward's interior/boundary aggregation split
+    (DESIGN.md §5) with the transpose mirrors attached: ``(interior,
+    boundary)`` blocks dicts for the two ``segment_mean_op`` row-range
+    calls.  Each half blocks ONLY its own row range — interior rows
+    ``[0, n_int)``, boundary rows rebased to ``[0, n_own - n_int)`` (a
+    zero-range partition contributes all-pad blocks that aggregate to
+    exact zeros) — while its transpose covers the full ``max_nodes``
+    source space, the gather side indexing the REBASED gradient sub-range
+    the forward produced."""
+    ints_f, ints_b, bnds_f, bnds_b = [], [], [], []
+    for p in range(pg.num_parts):
+        n_int = int(pg.n_int[p])
         ip, isrc = _sub_csr(pg.int_src[p], pg.int_dst[p], pg.int_mask[p],
-                            int(pg.n_int[p]))
-        ints.append(build_edge_blocks(ip, isrc, bn=bn, bec=bec))
+                            n_int)
+        ints_f.append(build_edge_blocks(ip, isrc, bn=bn, bec=bec))
+        real_i = pg.int_mask[p] > 0
+        ints_b.append(build_transpose_blocks(
+            pg.int_src[p][real_i], pg.int_dst[p][real_i], pg.max_nodes,
+            bn=bn, bec=bec))
+
         n_bnd = int(pg.n_own[p] - pg.n_int[p])
         bp, bsrc = _sub_csr(pg.bnd_src[p], pg.bnd_dst[p], pg.bnd_mask[p],
-                            n_bnd, row_base=int(pg.n_int[p]))
-        bnds.append(build_edge_blocks(bp, bsrc, bn=bn, bec=bec))
-    return (_stack_blocks(ints, pg.num_parts, bn),
-            _stack_blocks(bnds, pg.num_parts, bn))
+                            n_bnd, row_base=n_int)
+        bnds_f.append(build_edge_blocks(bp, bsrc, bn=bn, bec=bec))
+        real_b = pg.bnd_mask[p] > 0
+        bnds_b.append(build_transpose_blocks(
+            pg.bnd_src[p][real_b], pg.bnd_dst[p][real_b] - n_int,
+            pg.max_nodes, bn=bn, bec=bec))
+    return (_stack_vjp_dict(ints_f, ints_b, pg.num_parts, bn),
+            _stack_vjp_dict(bnds_f, bnds_b, pg.num_parts, bn))
 
 
 def stack_pytrees(trees):

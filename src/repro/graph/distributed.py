@@ -376,22 +376,18 @@ def make_ref_split_agg(own_cap: int):
 def make_pallas_mean_agg(max_nodes: int, *, interpret: bool = True):
     """Pallas-kernel mean aggregation: the GNN hot-spot on the MXU.
 
-    Reads the blocked-CSR structure (``blk_src``/``blk_dst``/``blk_mask``/
-    ``blk_deg``, built by ``repro.engine.stacking.build_stacked_blocks``)
-    from the shard, gathers messages in XLA and reduces them with
-    ``kernels.segment_agg.segment_agg_blocks``.  Forward-only (no VJP): the
-    engine uses it for full-graph inference; training gradients flow through
-    the sampled minibatch path.
+    Reads the paired forward/transpose blocked-CSR structure
+    (``shard["blk"]``, built by ``engine.stacking.build_stacked_vjp_blocks``)
+    and routes through the ONE differentiable op
+    ``kernels.ops.segment_mean_op`` — ``jax.grad`` through this forward
+    stages the transpose aggregation kernel (full-graph training,
+    DESIGN.md §6) instead of falling back to jnp scatter ops.
     """
-    from ..kernels.segment_agg import segment_agg_blocks
+    from ..kernels.ops import segment_mean_op
 
     def mean_agg(h, shard):
-        src = shard["blk_src"].reshape(-1)            # (nb*BE,) local ids
-        msgs = h[src]                                  # XLA gather
-        out = segment_agg_blocks(msgs, shard["blk_dst"], shard["blk_mask"],
-                                 shard["blk_deg"], mean=True,
-                                 interpret=interpret)
-        return out[:max_nodes].astype(h.dtype)
+        return segment_mean_op(h, shard["blk"], num_rows=max_nodes,
+                               interpret=interpret).astype(h.dtype)
 
     return mean_agg
 
@@ -401,27 +397,23 @@ def make_pallas_split_agg(own_cap: int, *, interpret: bool = True):
 
     Each half's blocked structure covers only its own row range — interior
     rows [0, n_int), boundary rows REBASED to [0, n_own - n_int) — and is
-    placed into the (own_cap, D) output through the row-range kernel entry
-    :func:`repro.kernels.segment_agg.segment_agg_rows`, so each pass pays
-    for ceil(range / BN) node blocks instead of the whole local space.
+    placed into the (own_cap, D) output by the unified op's ``row_base``
+    (the row-range variant of ``segment_mean_op``), so each pass pays for
+    ceil(range / BN) node blocks instead of the whole local space and stays
+    differentiable: the boundary half's backward routes gradient into owned
+    AND halo source rows, from where the halo exchange's own VJP carries it
+    back to the owning partition.
     """
-    from ..kernels.segment_agg import segment_agg_rows
+    from ..kernels.ops import segment_mean_op
 
     def agg_interior(h, shard):
-        msgs = h[shard["blk_int_src"].reshape(-1)]
-        out = segment_agg_rows(msgs, shard["blk_int_dst"],
-                               shard["blk_int_mask"], shard["blk_int_deg"],
-                               row_base=0, num_rows=own_cap,
-                               mean=True, interpret=interpret)
-        return out.astype(h.dtype)
+        return segment_mean_op(h, shard["blk_int"], num_rows=own_cap,
+                               row_base=0, interpret=interpret).astype(h.dtype)
 
     def agg_boundary(h, shard):
-        msgs = h[shard["blk_bnd_src"].reshape(-1)]
-        out = segment_agg_rows(msgs, shard["blk_bnd_dst"],
-                               shard["blk_bnd_mask"], shard["blk_bnd_deg"],
-                               row_base=shard["n_int"], num_rows=own_cap,
-                               mean=True, interpret=interpret)
-        return out.astype(h.dtype)
+        return segment_mean_op(h, shard["blk_bnd"], num_rows=own_cap,
+                               row_base=shard["n_int"],
+                               interpret=interpret).astype(h.dtype)
 
     return agg_interior, agg_boundary
 

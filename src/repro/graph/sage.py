@@ -5,12 +5,20 @@ Eq. 1–2 with the mean aggregator:
     h_N(v) = mean(h_u, u in sampled N(v))
     h_v    = sigma(W · concat(h_N(v), h_v))
 
-Two apply paths:
+Two apply paths, ONE aggregation op:
   · ``apply_sampled`` — fixed-shape minibatch blocks from NeighborSampler
     (the DistDGL training path, 2 layers as the paper fixes).
-  · ``apply_full``    — full-graph inference over edge lists using segment
-    aggregation (evaluation / centralized baseline; this is the compute
+  · ``apply_full``    — full-graph forward over edge lists (evaluation,
+    centralized baseline AND full-graph training; this is the compute
     hot-spot the Pallas ``segment_agg`` kernel accelerates).
+
+Both route Eq. 1's neighbour mean through :meth:`GraphSAGE.neighbor_mean`:
+irregular CSR aggregation goes to the differentiable blocked Pallas op
+``kernels.ops.segment_mean_op`` (custom VJP — ``jax.grad`` stages the
+transpose kernel, DESIGN.md §6), while the sampled path's fixed-fanout
+blocks are the regular degenerate case where the one-hot × matmul collapses
+to a dense ``mean(axis)``.  The old per-call-site ``segment_agg=`` callback
+plumbing is gone.
 """
 from __future__ import annotations
 
@@ -82,6 +90,26 @@ class GraphSAGE:
         mask = jax.random.bernoulli(key, keep, x.shape)
         return jnp.where(mask, x / keep, 0.0)
 
+    # --------------------------------------------------- the aggregation op
+    @staticmethod
+    def neighbor_mean(x: jnp.ndarray, *, axis: int | None = None,
+                      blocks: dict | None = None, num_rows: int | None = None,
+                      row_base=0, interpret: bool = True) -> jnp.ndarray:
+        """Eq. 1's neighbour mean — the model's single aggregation entry.
+
+        ``blocks`` (from ``kernels.ops.build_vjp_blocks``) selects the
+        irregular CSR path: the differentiable blocked Pallas op
+        ``segment_mean_op`` (forward AND backward on the MXU).  ``axis``
+        selects the sampled path's fixed-fanout blocks — the regular
+        degenerate case (every row has exactly ``fanout`` neighbours, so the
+        one-hot × matmul collapses to a dense mean along that axis).
+        """
+        if blocks is not None:
+            from ..kernels.ops import segment_mean_op
+            return segment_mean_op(x, blocks, num_rows=num_rows,
+                                   row_base=row_base, interpret=interpret)
+        return x.mean(axis=axis)
+
     # ------------------------------------------------------- sampled apply
     def apply_sampled(
         self,
@@ -98,12 +126,15 @@ class GraphSAGE:
         x_t = self._maybe_dropout(x_t, k1)
 
         # layer 1 for targets: aggregate their 1-hop samples
-        h1_t = self._layer(params.layer1, x_t, x_1.mean(axis=1), activate=True)
+        h1_t = self._layer(params.layer1, x_t,
+                           self.neighbor_mean(x_1, axis=1), activate=True)
         # layer 1 for 1-hop nodes: aggregate the 2-hop samples
-        h1_1 = self._layer(params.layer1, x_1, x_2.mean(axis=2), activate=True)
+        h1_1 = self._layer(params.layer1, x_1,
+                           self.neighbor_mean(x_2, axis=2), activate=True)
         h1_1 = self._maybe_dropout(h1_1, k2)
         # layer 2 for targets
-        logits = self._layer(params.layer2, h1_t, h1_1.mean(axis=1), activate=False)
+        logits = self._layer(params.layer2, h1_t,
+                             self.neighbor_mean(h1_1, axis=1), activate=False)
         return logits
 
     # ---------------------------------------------------------- full apply
@@ -114,18 +145,39 @@ class GraphSAGE:
         edge_src: jnp.ndarray,     # (E,) message sources
         edge_dst: jnp.ndarray,     # (E,) message destinations
         num_nodes: int,
-        segment_agg=None,          # optional kernel override (ops.segment_mean)
+        *,
+        blocks: dict | None = None,   # prebuilt ops.build_vjp_blocks arrays
+        use_pallas: bool = True,
+        interpret: bool = True,
     ) -> jnp.ndarray:
-        """Full-graph 2-layer forward -> (N, num_classes) logits."""
+        """Full-graph 2-layer forward -> (N, num_classes) logits.
 
-        def mean_agg(h: jnp.ndarray) -> jnp.ndarray:
-            if segment_agg is not None:
-                return segment_agg(h, edge_src, edge_dst, num_nodes)
-            s = jax.ops.segment_sum(h[edge_src], edge_dst, num_segments=num_nodes)
-            deg = jax.ops.segment_sum(
-                jnp.ones_like(edge_dst, dtype=h.dtype), edge_dst, num_segments=num_nodes
-            )
-            return s / jnp.maximum(deg, 1.0)[:, None]
+        Differentiable end-to-end: the Pallas path (default) goes through
+        the custom-VJP ``segment_mean_op``, the ``use_pallas=False`` path
+        through the canonical jnp reference ``kernels.ref.segment_agg_ref``
+        — the same two backends every other forward consumes.  ``blocks``
+        may be passed prebuilt; otherwise it is built host-side from the
+        edge lists, which requires them CONCRETE — under ``jit`` with traced
+        edges the call transparently falls back to the (equally
+        differentiable) jnp reference, preserving the pre-blocks jit
+        contract.
+        """
+        if use_pallas and blocks is None and any(
+                isinstance(e, jax.core.Tracer) for e in (edge_src, edge_dst)):
+            use_pallas = False
+        if use_pallas:
+            if blocks is None:
+                from ..kernels.ops import build_vjp_blocks
+                blocks = build_vjp_blocks(np.asarray(edge_src),
+                                          np.asarray(edge_dst),
+                                          num_rows=num_nodes,
+                                          num_src_rows=num_nodes)
+            mean_agg = lambda h: self.neighbor_mean(
+                h, blocks=blocks, num_rows=num_nodes, interpret=interpret)
+        else:
+            from ..kernels.ref import segment_agg_ref
+            mean_agg = lambda h: segment_agg_ref(
+                h, edge_src, edge_dst, num_nodes, mean=True)
 
         h1 = self._layer(params.layer1, features, mean_agg(features), activate=True)
         logits = self._layer(params.layer2, h1, mean_agg(h1), activate=False)

@@ -15,32 +15,47 @@ import numpy as np
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .rmsnorm import rmsnorm_pallas
-from .segment_agg import EdgeBlocks, build_edge_blocks, segment_agg_pallas
+from .segment_agg import (EdgeBlocks, build_edge_blocks, build_vjp_blocks,
+                          segment_agg_pallas, segment_mean_op)
 
 __all__ = [
-    "segment_agg", "make_segment_agg", "flash_attention", "rmsnorm",
+    "segment_agg", "make_segment_agg", "segment_mean_op", "build_vjp_blocks",
+    "make_mean_blocks", "flash_attention", "rmsnorm",
     "build_edge_blocks", "EdgeBlocks",
 ]
+
+
+def make_mean_blocks(indptr: np.ndarray, indices: np.ndarray) -> dict:
+    """Host-side: paired forward/transpose block structure for
+    :func:`segment_mean_op` from a CSR graph (``num_src_rows == num_rows``)."""
+    indptr = np.asarray(indptr)
+    n = len(indptr) - 1
+    dst = np.repeat(np.arange(n), np.diff(indptr))
+    return build_vjp_blocks(np.asarray(indices), dst, num_rows=n,
+                            num_src_rows=n)
 
 
 def make_segment_agg(indptr: np.ndarray, indices: np.ndarray, *, mean: bool = True,
                      interpret: bool = True, use_pallas: bool = True):
     """Bind the static CSR block structure once per graph; returns
-    ``agg(x) -> (N, D)`` suitable for jit closure."""
+    ``agg(x) -> (N, D)`` suitable for jit closure.
+
+    The Pallas path routes through :func:`segment_mean_op`, so the returned
+    closure is DIFFERENTIABLE: ``jax.grad`` through it stages the transpose
+    aggregation kernel instead of falling back to jnp scatter ops.
+    """
+    n = len(indptr) - 1
     if not use_pallas:
         src = jnp.asarray(indices)
-        dst = jnp.asarray(np.repeat(np.arange(len(indptr) - 1), np.diff(indptr)))
-        n = len(indptr) - 1
+        dst = jnp.asarray(np.repeat(np.arange(n), np.diff(indptr)))
         return lambda x: ref.segment_agg_ref(x, src, dst, n, mean=mean)
 
-    blocks = build_edge_blocks(np.asarray(indptr), np.asarray(indices))
-    src_flat = jnp.asarray(blocks.src.reshape(-1))
-    n = blocks.num_nodes
+    blocks = {k: jnp.asarray(v)
+              for k, v in make_mean_blocks(indptr, indices).items()}
 
     def agg(x: jnp.ndarray) -> jnp.ndarray:
-        msgs = x[src_flat]  # XLA gather (per-block layout)
-        out = segment_agg_pallas(msgs, blocks, mean=mean, interpret=interpret)
-        return out[:n]
+        return segment_mean_op(x, blocks, num_rows=n, mean=mean,
+                               interpret=interpret)
 
     return agg
 

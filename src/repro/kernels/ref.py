@@ -15,14 +15,21 @@ def segment_agg_ref(
     num_nodes: int,
     mean: bool = True,
 ) -> jnp.ndarray:
-    """out[v] = sum/mean of x[u] over in-edges (u, v)."""
+    """out[v] = sum/mean of x[u] over in-edges (u, v).
+
+    The canonical jnp segment-mean (imported by ``ops.make_segment_agg``'s
+    fallback and ``graph.sage.apply_full``'s jnp path).  The mean divides in
+    the input precision for float64 — casting through float32 would make the
+    fp64 oracle lossier than the kernel it checks.
+    """
     s = jax.ops.segment_sum(x[edge_src], edge_dst, num_segments=num_nodes)
     if not mean:
         return s.astype(x.dtype)
+    acc_dt = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
     deg = jax.ops.segment_sum(
-        jnp.ones_like(edge_dst, dtype=jnp.float32), edge_dst, num_segments=num_nodes
+        jnp.ones_like(edge_dst, dtype=acc_dt), edge_dst, num_segments=num_nodes
     )
-    return (s.astype(jnp.float32) / jnp.maximum(deg, 1.0)[:, None]).astype(x.dtype)
+    return (s.astype(acc_dt) / jnp.maximum(deg, 1.0)[:, None]).astype(x.dtype)
 
 
 def segment_agg_rows_ref(

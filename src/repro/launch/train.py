@@ -54,6 +54,7 @@ def run_gnn(args) -> dict:
         batch_size=args.batch_size,
         fanouts=(args.fanout, args.fanout),
         seed=args.seed,
+        centralized=args.centralized,
         engine_mode=args.engine,
         use_pallas_agg=not args.no_pallas_agg,
         overlap_halo=args.overlap_halo,
@@ -62,6 +63,8 @@ def run_gnn(args) -> dict:
         async_personalize=args.async_personalize,
         double_buffer=not args.no_double_buffer,
         phase0_fraction=args.phase0_frac,
+        full_graph_train=args.full_graph_train,
+        full_graph_iters=args.full_graph_iters,
     )
     result = run_eat_distgnn(cfg, verbose=True)
     print(json.dumps(result.summary(), indent=2))
@@ -183,6 +186,18 @@ def main() -> int:
     g.add_argument("--no-interpret", action="store_true",
                    help="run Pallas kernels compiled (real TPU) instead of "
                         "interpret mode; pair with --engine spmd on a mesh")
+    g.add_argument("--centralized", action="store_true",
+                   help="single host, no partitioning (the Table IV "
+                        "baseline configuration)")
+    g.add_argument("--full-graph-train", action="store_true",
+                   help="phase-0 trains full-graph (full-batch "
+                        "value_and_grad through the distributed forward "
+                        "and the differentiable Pallas aggregation op) "
+                        "instead of sampled minibatches; with --centralized "
+                        "this is the Table IV baseline at full-graph scale")
+    g.add_argument("--full-graph-iters", type=int, default=1,
+                   help="full-batch steps per phase-0 epoch with "
+                        "--full-graph-train")
     g.add_argument("--async-personalize", action="store_true",
                    help="phase-1 with per-partition iteration budgets and "
                         "the CBS mini-epoch draw on device (no host NumPy "

@@ -25,6 +25,11 @@ Faithfulness notes:
     deployment has, and a deliberate change from the pre-engine driver,
     which evaluated each host's model solo over the whole graph.
   · CBS mini-epochs resample 25% of the host's training nodes by Eq. 3.
+  · ``full_graph_train=True`` replaces phase-0's sampled minibatches with
+    full-batch ``value_and_grad`` straight through the distributed forward
+    (halo exchange + the differentiable blocked aggregation op, DESIGN.md
+    §6); with ``centralized=True`` this is the Table IV baseline trained at
+    full-graph scale on the kernel path.
   · ``async_personalize=True`` makes phase-1 genuinely asynchronous: each
     partition gets its own iteration budget from GPController (masked
     variable-length scan), and the mini-epoch draw itself moves on-device
@@ -98,6 +103,14 @@ class EATConfig:
     overlap_halo: bool = False
     ring_chunks: int = 0                  # chunked ppermute ring (0 = all_to_all)
     interpret: bool = True                # Pallas interpret mode (False on TPU)
+    # phase-0 trains FULL-GRAPH instead of sampled minibatches: one (or
+    # ``full_graph_iters``) full-batch value_and_grad step(s) per epoch
+    # straight through the distributed forward — halo exchange and the
+    # differentiable blocked aggregation op (custom VJP; DESIGN.md §6).
+    # With ``centralized=True`` this is the paper's Table IV baseline
+    # trained at full-graph scale on the MXU path.
+    full_graph_train: bool = False
+    full_graph_iters: int = 1             # full-batch steps per phase-0 epoch
     # phase-1 runs fully on device: per-partition iteration budgets + the CBS
     # mini-epoch draw / fanout sampling / feature gather on the epoch trace
     # (no host NumPy on the mini-epoch path; DESIGN.md §4)
@@ -158,6 +171,7 @@ class EATResult:
             "phase1_epochs": self.phase1_epochs,
             "async_personalize": self.config.async_personalize,
             "overlap_halo": self.config.overlap_halo,
+            "full_graph_train": self.config.full_graph_train,
         }
 
     def _label(self) -> str:
@@ -264,7 +278,8 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                             use_pallas_agg=cfg.use_pallas_agg,
                             interpret=cfg.interpret,
                             overlap_halo=cfg.overlap_halo,
-                            ring_chunks=cfg.ring_chunks))
+                            ring_chunks=cfg.ring_chunks,
+                            fg_loss="focal" if cfg.use_focal else "ce"))
     if verbose:
         print(f"engine[{engine.mode}] {pg.summary()}")
 
@@ -350,12 +365,29 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
             return np.maximum(t_host, t_dev / n_parts)
         return t_host + t_dev / n_parts
 
+    # full-graph epochs exchange halos in BOTH directions of each train
+    # step (the backward's transpose aggregation routes gradient through
+    # the same send/recv lists), plus the per-epoch validation forward's
+    # per-layer exchange — which the sampled path's accounting also counts
+    # — and fetch no sampled neighbours
+    fg_halo_bytes_per_epoch = (4 * pg.halo_bytes_per_layer
+                               * cfg.full_graph_iters
+                               + 2 * pg.halo_bytes_per_layer)
+
     while not ctrl.done and ctrl.phase == 0:
-        batches, t_host, iters = next_epoch_batches()
-        params, opt_state, losses, val_micro, t_dev = engine.phase0_epoch(
-            params, opt_state, batches)
+        if cfg.full_graph_train:
+            params, opt_state, losses, val_micro, t_dev = (
+                engine.phase0_fullgraph_epoch(params, opt_state,
+                                              iters=cfg.full_graph_iters))
+            iters = np.asarray(losses).shape[0]
+            t_host = np.zeros(n_parts)      # no host sampling on this path
+            comm_halo_p0 += fg_halo_bytes_per_epoch
+        else:
+            batches, t_host, iters = next_epoch_batches()
+            params, opt_state, losses, val_micro, t_dev = engine.phase0_epoch(
+                params, opt_state, batches)
+            comm_halo_p0 += halo_bytes_per_epoch
         comm_grad += grad_bytes_per_sync * n_parts * iters
-        comm_halo_p0 += halo_bytes_per_epoch
         host_time = epoch_host_times(t_host, t_dev)
         sim_time += float(host_time.max())
         epoch_times.append(float(host_time.max()))
