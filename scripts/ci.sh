@@ -6,13 +6,17 @@
 # exceeding 30 s that is not grandfathered in tests/tier1_slowlist.txt
 # fails the build.
 #
-#   scripts/ci.sh          tier-1 (-m "not slow") + baseline delta + 30s gate
+#   scripts/ci.sh          tier-1 (-m "not slow and not timing") + baseline
+#                          delta + 30s gate + the timing quarantine lane
 #   scripts/ci.sh grad     grad-parity smoke only: jax.grad through the
 #                          custom-VJP Pallas aggregation op vs the jnp
 #                          reference, with fwd+bwd kernel-staging evidence
+#   scripts/ci.sh timing   the timing quarantine lane only: wall-clock-
+#                          sensitive tests, one automatic retry, never part
+#                          of the 30 s runtime gate
 #   scripts/ci.sh slow     the -m slow stage (kernel sweeps, multi-device
 #                          subprocess compiles, the full fp64 parity matrix)
-#   scripts/ci.sh all      tier-1 (incl. the grad smoke) + slow
+#   scripts/ci.sh all      tier-1 (incl. the grad smoke) + timing + slow
 set -u
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -26,6 +30,27 @@ export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0.5
 mode=${1:-tier1}
 if [ "$mode" = "slow" ]; then
     exec python -m pytest -m slow -q
+fi
+
+# ---- timing quarantine lane ------------------------------------------------
+# Wall-clock-sensitive tests (@pytest.mark.timing) compare elapsed times, so
+# a loaded machine can flake them through no fault of the code.  They run
+# OUTSIDE tier-1 (excluded from the pass/fail baseline and the 30 s runtime
+# gate) with ONE automatic retry; only a double failure fails the build.
+timing_lane() {
+    if python -m pytest -m timing -q; then
+        return 0
+    fi
+    echo "timing lane failed once; retrying (wall-clock tests are load-sensitive)"
+    python -m pytest -m timing -q --last-failed || {
+        echo "REGRESSION: timing lane failed twice in a row"
+        return 1
+    }
+}
+
+if [ "$mode" = "timing" ]; then
+    timing_lane
+    exit $?
 fi
 
 # ---- grad-parity smoke -----------------------------------------------------
@@ -69,7 +94,7 @@ fi
 
 grad_smoke || { echo "REGRESSION: grad-parity smoke failed"; exit 1; }
 
-out=$(python -m pytest -m "not slow" -q --durations=0 2>&1)
+out=$(python -m pytest -m "not slow and not timing" -q --durations=0 2>&1)
 pytest_status=$?
 echo "$out" | tail -25
 
@@ -160,6 +185,8 @@ while read -r id base; do
 done <<EOF
 $(awk '$1 !~ /^#/ && NF >= 2 {print $1, $2}' "$slowlist" 2>/dev/null)
 EOF
+
+timing_lane || exit 1
 
 if [ "$mode" = "all" ]; then
     python -m pytest -m slow -q || exit 1

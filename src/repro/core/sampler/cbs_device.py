@@ -1,12 +1,19 @@
-"""Device-side CBS — Eq. 3 probabilities and the mini-epoch draw as jax ops.
+"""Device-side epoch sampling — Eq. 3 probabilities and the epoch draw as
+jax ops, for BOTH training phases.
 
 ``core/sampler/cbs.py`` keeps the paper-faithful host NumPy sampler
 (DistDGL's CPU workers); this module ports the SAME math to jax PRNG so the
-whole mini-epoch — subset resample, batch shuffle, fanout neighbour
-sampling, feature gather — stages onto the fused epoch trace.  That removes
-the host round-trip through ``stack_epoch_batches`` that otherwise bounds
-every personalization epoch (the CPU-sampling bottleneck FastSample and
-DistDGL's hybrid design identify as the dominant cost).
+whole epoch — subset resample, batch shuffle, fanout neighbour sampling,
+feature gather — stages onto the fused epoch trace.  That removes the host
+round-trip through ``stack_epoch_batches`` that otherwise bounds every
+epoch (the CPU-sampling bottleneck FastSample and DistDGL's hybrid design
+identify as the dominant cost).  One :class:`DeviceEpochSampler` serves
+both phases (DESIGN.md §4, §7): phase-1's CBS mini-epoch is the
+``class_balanced=True`` configuration; phase-0's generalization draw is the
+same program — the CBS-weighted Eq. 3 mini-epoch when CBS is on, or, with
+``class_balanced=False``, a uniform shuffle of the full local train set
+(equal log-probabilities make the Gumbel top-k ranking a uniform
+permutation — exactly ``CBSampler``'s plain-epoch contract).
 
 Pieces:
 
@@ -142,7 +149,11 @@ class DeviceEpochSampler:
     partition methods over the leading ``P`` axis of ``train_idx`` /
     ``logp`` / ``k``; the global CSR, features and labels are replicated
     (cross-partition neighbour fetch is allowed exactly like the host
-    sampler / DistDGL's remote fetch).
+    sampler / DistDGL's remote fetch).  The same instance drives phase-1's
+    async mini-epochs AND phase-0's fused generalization epochs — a fresh
+    PRNG key per epoch reshuffles, and within one epoch each valid train
+    index is visited at most once (the without-replacement Gumbel top-k,
+    statistically asserted in tests/test_cbs_device.py).
     """
 
     indptr: Any          # (N+1,) int32
@@ -160,8 +171,10 @@ class DeviceEpochSampler:
 
     # -------------------------------------------------- on-trace programs
     def draw_epoch(self, key, logp_row, train_row, k_row):
-        """ONE partition's mini-epoch batch indices: Gumbel top-k subset,
-        uniform shuffle, fixed-shape ``(I, B)`` chunks + validity mask."""
+        """ONE partition's epoch batch indices: Gumbel top-k subset (a
+        uniform permutation when the log-probabilities are flat — the
+        phase-0 plain-epoch draw), uniform shuffle, fixed-shape ``(I, B)``
+        chunks + validity mask."""
         global _DEVICE_TRACES
         _DEVICE_TRACES += 1
         kg, kp = jax.random.split(key)
@@ -208,7 +221,9 @@ def build_device_epoch_sampler(graph, host_train, num_parts: int, *,
     """Stage a :class:`DeviceEpochSampler` from a CSRGraph + per-host train
     sets.  Mini-epoch sizes mirror ``CBSampler.mini_epoch_size`` exactly, so
     budget accounting (``natural_iters``) matches the host sampler's batch
-    counts."""
+    counts; with ``class_balanced=False`` every partition's epoch is the
+    full local train set drawn as a uniform permutation (the phase-0
+    baseline draw)."""
     t_max = max(1, max(len(t) for t in host_train))
     train_pad = np.zeros((num_parts, t_max), np.int32)
     logp = np.full((num_parts, t_max), -np.inf, np.float32)

@@ -80,6 +80,8 @@ class SequentialReference:
         self._pstep1 = jax.jit(make_personalize_partition_step(
             loss_fn, optimizer, hp))
         self._device_sampler = None
+        self.last_eval_seconds = 0.0   # wall time of the latest standalone
+                                       # _eval (first call includes jit)
 
         # the all-reduce + optimizer update runs as ONE jitted function:
         # AdamW keeps float32 moments, and XLA's fused rounding of that
@@ -164,6 +166,9 @@ class SequentialReference:
         return logits
 
     def _eval(self, params_list: list, split: str):
+        import time
+
+        t0 = time.perf_counter()
         logits = self._full_forward(params_list)
         micros, preds = [], []
         for p in range(self.num_parts):
@@ -173,7 +178,10 @@ class SequentialReference:
             micro, _, _ = f1_scores_jnp(pr, lab, self.num_classes)
             micros.append(micro)
             preds.append(pr)
-        return jnp.stack(micros), jnp.stack(preds)
+        out = jnp.stack(micros), jnp.stack(preds)
+        jax.block_until_ready(out)
+        self.last_eval_seconds = time.perf_counter() - t0
+        return out
 
     # ------------------------------------------------------- public surface
     def phase0_epoch(self, params, opt_state, batches):
@@ -207,6 +215,58 @@ class SequentialReference:
         jax.block_until_ready(params)
         dt = time.perf_counter() - t0
         val_micro, _ = self._eval([params] * P, "val")
+        return params, opt_state, jnp.stack(all_losses), val_micro, dt
+
+    def phase0_epoch_async(self, params, opt_state, keys):
+        """Python-loop reference for the fused on-device generalization
+        epoch: the SAME per-partition PRNG programs (epoch draw, fanout
+        sampling, feature gather) executed one partition at a time, the
+        all-reduce as the deterministic stack-and-sum, and the validation
+        eval as the explicit Python-loop forward — the parity oracle for
+        SPMDEngine.phase0_epoch_async (DESIGN.md §7)."""
+        import time
+
+        if self._device_sampler is None:
+            raise ValueError("phase0_epoch_async needs set_device_sampler()")
+        ds = self._device_sampler
+        P = self.num_parts
+        iters = ds.num_batches
+        # per-partition epoch draws, in the engine's exact key order:
+        # kd (draw) then ke split into per-iteration batch keys
+        drawn = []
+        for p in range(P):
+            kd, ke = jax.random.split(keys[p])
+            nodes, valid = ds.draw_epoch(kd, ds.logp[p], ds.train_idx[p],
+                                         ds.k[p])
+            drawn.append((nodes, valid, jax.random.split(ke, iters)))
+        # warm the jit caches on the first iteration's shapes (results
+        # discarded — the functions are pure) so the timed window excludes
+        # XLA compilation, matching the engine's AOT contract
+        b0 = ds.make_batch(drawn[0][2][0], drawn[0][0][0], drawn[0][1][0])
+        _, g0 = self._grad_step(params, b0)
+        z = jax.tree.map(lambda g: jnp.stack([g] * P), g0)
+        jax.block_until_ready(self._apply_avg(params, opt_state, z))
+
+        t0 = time.perf_counter()
+        all_losses = []
+        for it in range(iters):
+            losses, grads = [], []
+            for p in range(P):
+                nodes, valid, iter_keys = drawn[p]
+                b = ds.make_batch(iter_keys[it], nodes[it], valid[it])
+                l, g = self._grad_step(params, b)
+                losses.append(l)
+                grads.append(g)
+            stacked = jax.tree.map(lambda *gs: jnp.stack(gs), *grads)
+            params, opt_state = self._apply_avg(params, opt_state, stacked)
+            all_losses.append(jnp.stack(losses))
+        # the fused program's eval is part of the one device call: include
+        # it in the timed window (unlike phase0_epoch, whose eval is a
+        # separate call excluded from the train timing)
+        val_micro, _ = self._eval([params] * P, "val")
+        jax.block_until_ready(val_micro)
+        dt = time.perf_counter() - t0
+        self.last_eval_seconds = 0.0    # eval is inside dt on this path
         return params, opt_state, jnp.stack(all_losses), val_micro, dt
 
     def phase0_fullgraph_epoch(self, params, opt_state, iters: int = 1):

@@ -117,6 +117,8 @@ class SPMDEngine:
 
       phase0_epoch(params, opt_state, batches) ->
           (params, opt_state, losses (I, P), val_micro (P,))
+      phase0_epoch_async(params, opt_state, keys) ->
+          (params, opt_state, losses (I, P), val_micro (P,))
       phase1_epoch(pparams, popt, batches, global_params, budgets) ->
           (pparams, popt, losses (I, P), val_micro (P,))
       phase1_epoch_async(pparams, popt, keys, budgets, global_params) ->
@@ -125,9 +127,11 @@ class SPMDEngine:
 
     ``budgets`` is a per-partition iteration budget (int32, (P,)); a bool
     ``active`` vector is accepted and promoted to full-epoch-or-zero.  The
-    async variant needs :meth:`set_device_sampler` and runs the CBS
-    mini-epoch draw + fanout sampling + feature gather on the epoch trace
-    (DESIGN.md §4).
+    async variants need :meth:`set_device_sampler` and run the epoch draw +
+    fanout sampling + feature gather on the epoch trace (DESIGN.md §4, §7);
+    ``phase0_epoch_async`` additionally fuses the validation eval forward
+    into the SAME compiled call, so a generalization epoch is one
+    host→device round-trip.
     """
 
     def __init__(self, model, loss_fn, optimizer, pg: PartitionedGraph,
@@ -205,6 +209,8 @@ class SPMDEngine:
         self._pstep = make_personalize_step(loss_fn, optimizer, hp)
         self._device_sampler = None
         self._sampler_gen = 0
+        self.last_eval_seconds = 0.0   # execution time of the latest
+                                       # separately-compiled evaluate() call
         self._mesh = None
         if self.mode == "spmd":
             from ..launch.mesh import make_partition_mesh
@@ -309,6 +315,85 @@ class SPMDEngine:
             out_specs=(P(), P(), P(None, AXIS)))
         return fn(params, opt_state, self.shards, self.labels,
                   self.masks["train"])
+
+    def _phase0_async_partition_program(self):
+        """ONE partition's fused generalization epoch: epoch draw (uniform
+        shuffle, or the CBS-weighted Eq. 3 mini-epoch when the sampler is
+        class-balanced), per-iteration batch materialisation, the train scan
+        with the cross-partition gradient mean, and the validation eval
+        forward — all on a single trace (DESIGN.md §7).  The SINGLE body both
+        modes execute, so PRNG consumption order cannot drift between them.
+
+        The gradient all-reduce is spelled ``all_gather`` + a local
+        stack-axis sum: pure data movement followed by the SAME deterministic
+        reduction the sequential oracle performs, which is what makes the
+        spmd mesh mode bit-for-bit with the reference (a ``pmean``'s
+        reduction order is the collective implementation's choice).
+        """
+        ds = self._device_sampler
+        num_parts = self.num_parts
+
+        def per_part(params, opt_state, key, logp_row, train_row, k_row,
+                     shard, labels, val_mask):
+            kd, ke = jax.random.split(key)
+            nodes, valid = ds.draw_epoch(kd, logp_row, train_row, k_row)
+            iter_keys = jax.random.split(ke, ds.num_batches)
+
+            def one(carry, xs):
+                n_i, v_i, k_i = xs
+                p, o = carry
+                batch = ds.make_batch(k_i, n_i, v_i)
+                loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
+                g_all = jax.lax.all_gather(grads, AXIS)        # (P, ...)
+                grads = jax.tree.map(
+                    lambda g: jnp.sum(g, axis=0) / num_parts, g_all)
+                updates, o = self.optimizer.update(grads, o, p)
+                return (apply_updates(p, updates), o), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                one, (params, opt_state), (nodes, valid, iter_keys))
+            # fused eval: the validation forward (halo exchange + blocked
+            # aggregation + on-device F1) on the epoch's final params, in
+            # the SAME device program as the train scan
+            preds = jnp.argmax(self.fwd(params, shard), axis=-1)
+            micro = self._micro_of(preds, labels, val_mask)
+            return params, opt_state, losses, micro
+
+        return per_part
+
+    def _phase0_async_stacked(self, params, opt_state, keys):
+        ds = self._device_sampler
+        per_part = self._phase0_async_partition_program()
+        params, opt_state, losses, micro = jax.vmap(
+            per_part, axis_name=AXIS,
+            in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0))(
+                params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
+                self.shards, self.labels, self.masks["val"])
+        # every partition applies the identical mean update to the identical
+        # replica: return one copy (bitwise equal across the stacked axis)
+        return (jax.tree.map(lambda x: x[0], params),
+                jax.tree.map(lambda x: x[0], opt_state),
+                losses.T, micro)                    # (I, P), (P,)
+
+    def _phase0_async_spmd(self, params, opt_state, keys):
+        ds = self._device_sampler
+
+        def shard_fn(params, opt_state, key_s, logp_s, train_s, k_s,
+                     shard_s, labels_s, mask_s):
+            per_part = self._phase0_async_partition_program()
+            sh = jax.tree.map(lambda x: x[0], shard_s)
+            params, opt_state, losses, micro = per_part(
+                params, opt_state, key_s[0], logp_s[0], train_s[0], k_s[0],
+                sh, labels_s[0], mask_s[0])
+            return params, opt_state, losses[:, None], micro[None]
+
+        fn = shard_map_compat(
+            shard_fn, self._mesh,
+            in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P(AXIS),
+                      P(AXIS), P(AXIS), P(AXIS)),
+            out_specs=(P(), P(), P(None, AXIS), P(AXIS)))
+        return fn(params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
+                  self.shards, self.labels, self.masks["val"])
 
     def _phase1_stacked(self, pparams, popt, batches, global_params, budgets):
         def one_iter(carry, xs):
@@ -484,6 +569,35 @@ class SPMDEngine:
         val_micro, _ = self.evaluate(params, "val", per_partition_params=False)
         return params, opt_state, losses, val_micro, dt
 
+    def phase0_epoch_async(self, params, opt_state, keys):
+        """One fused generalization epoch: the on-device epoch draw (uniform
+        shuffle of the local train set, or the CBS mini-epoch when the
+        attached sampler is class-balanced), batch materialisation, the
+        synchronous train scan with the cross-partition gradient mean, AND
+        the validation eval forward — all in ONE compiled device program, so
+        an epoch costs one host→device round-trip instead of shipping
+        ``iters`` host-built batches plus a separate eval call.
+
+        ``keys`` is (P, 2) uint32 per-partition PRNG state (fold the epoch
+        index into a per-partition base key).  Unlike phase-1 there are no
+        budgets: generalization is synchronous data-parallel SGD, every
+        partition scans all ``num_batches`` iterations.  Returns
+        ``(params, opt_state, losses (I, P), val_micro (P,), device_seconds)``
+        where the timing, unlike :meth:`phase0_epoch`, INCLUDES the fused
+        eval (it is part of the one device call; the pipeline's epoch-time
+        attribution accounts for that).
+        """
+        if self._device_sampler is None:
+            raise ValueError("phase0_epoch_async needs set_device_sampler()")
+        impl = (self._phase0_async_spmd if self.mode == "spmd"
+                else self._phase0_async_stacked)
+        fn = self._compiled(f"phase0_async-g{self._sampler_gen}", impl,
+                            params, opt_state, keys)
+        (params, opt_state, losses, val_micro), dt = self._timed(
+            fn, params, opt_state, keys)
+        self.last_eval_seconds = 0.0    # eval is inside dt on this path
+        return params, opt_state, losses, val_micro, dt
+
     def phase0_fullgraph_epoch(self, params, opt_state, iters: int = 1):
         """Full-graph phase-0 epoch: ``iters`` full-batch steps whose
         ``value_and_grad`` runs straight through the distributed forward —
@@ -523,7 +637,8 @@ class SPMDEngine:
     # ----------------------------------------------- async personalization
     def set_device_sampler(self, sampler) -> None:
         """Attach a :class:`DeviceEpochSampler`; required by
-        :meth:`phase1_epoch_async` (the fully-on-device mini-epoch path)."""
+        :meth:`phase0_epoch_async` and :meth:`phase1_epoch_async` (the
+        fully-on-device epoch paths)."""
         self._device_sampler = sampler
         # the sampler's arrays are baked into the async trace as constants,
         # so a new sampler must never hit an old executable (shapes alone
@@ -531,7 +646,8 @@ class SPMDEngine:
         # executables pin those arrays in device memory, so evict them
         self._sampler_gen += 1
         self._cache = {k: v for k, v in self._cache.items()
-                       if not str(k[0]).startswith("phase1_async-")}
+                       if not str(k[0]).startswith(("phase0_async-",
+                                                    "phase1_async-"))}
 
     def phase1_epoch_async(self, pparams, popt, keys, budgets, global_params):
         """One asynchronous personalization step: mini-epoch resample, batch
@@ -571,4 +687,8 @@ class SPMDEngine:
         else:
             impl = lambda prm: self._eval_stacked(prm, split, per_partition_params)
         fn = self._compiled(f"eval-{split}-{per_partition_params}", impl, params)
-        return fn(params)
+        # execution time of the compiled eval (AOT compile excluded), so the
+        # pipeline can compare host-path epochs, whose eval is a separate
+        # call, against the fused async epoch whose timing includes eval
+        out, self.last_eval_seconds = self._timed(fn, params)
+        return out

@@ -61,6 +61,7 @@ def run_gnn(args) -> dict:
         ring_chunks=args.ring_chunks,
         interpret=not args.no_interpret,
         async_personalize=args.async_personalize,
+        async_generalize=args.async_generalize,
         double_buffer=not args.no_double_buffer,
         phase0_fraction=args.phase0_frac,
         full_graph_train=args.full_graph_train,
@@ -202,6 +203,12 @@ def main() -> int:
                    help="phase-1 with per-partition iteration budgets and "
                         "the CBS mini-epoch draw on device (no host NumPy "
                         "on the mini-epoch path)")
+    g.add_argument("--async-generalize", action="store_true",
+                   help="phase-0 epoch draw on device (uniform shuffle, or "
+                        "the CBS mini-epoch with CBS on) with the train "
+                        "scan and the validation eval fused into ONE "
+                        "device program per epoch — retires the host "
+                        "prefetcher on that path")
     g.add_argument("--no-double-buffer", action="store_true",
                    help="disable overlapping host-side sampling of epoch "
                         "t+1 with the device step of epoch t")

@@ -35,8 +35,16 @@ Faithfulness notes:
     variable-length scan), and the mini-epoch draw itself moves on-device
     (core/sampler/cbs_device.py) so no host NumPy runs on that path;
     DESIGN.md §4 defines what "epoch" means when budgets differ.
+  · ``async_generalize=True`` moves phase-0's epoch draw on-device too
+    (the same DeviceEpochSampler: CBS-weighted mini-epochs, or a uniform
+    shuffle of the local train set without CBS) and fuses the train scan
+    WITH the validation eval forward into one compiled call, so a
+    generalization epoch is one host→device round-trip — no host NumPy
+    draw and no ``_EpochPrefetcher`` on that path (DESIGN.md §7).
+    ``full_graph_train`` supersedes it (full-graph phase-0 has no sampling).
   · Host-side sampling (where it remains) is double-buffered: epoch t+1's
-    draw overlaps epoch t's fused device step.
+    draw overlaps epoch t's fused device step.  The prefetcher is created
+    lazily, on the first epoch that actually samples on the host.
   · Sampling may cross partition boundaries exactly like DistDGL's remote
     neighbour fetch; comm_halo_bytes accounts BOTH that sampled remote-fetch
     volume (cut_fraction-scaled, per training epoch) and the eval forward's
@@ -115,6 +123,11 @@ class EATConfig:
     # mini-epoch draw / fanout sampling / feature gather on the epoch trace
     # (no host NumPy on the mini-epoch path; DESIGN.md §4)
     async_personalize: bool = False
+    # phase-0 runs fully on device too: the epoch draw (CBS mini-epoch, or a
+    # uniform train-set shuffle without CBS) plus the train scan plus the
+    # fused validation eval, all in ONE device program per epoch — no host
+    # prefetcher on this path (DESIGN.md §7; superseded by full_graph_train)
+    async_generalize: bool = False
     # overlap host-side sampling of epoch t+1 with the device step of epoch t
     double_buffer: bool = True
 
@@ -128,7 +141,8 @@ class EATResult:
     partition_time_s: float
     weight_time_s: float
     train_time_s: float                # simulated distributed wall time
-    epoch_time_s: float                # mean per-epoch (phase-0)
+    epoch_time_s: float                # mean per-epoch (phase-0), eval excluded
+                                       # where eval is a separate call
     epochs_run: int
     personalize_start_epoch: int
     loss_history: list[float] = field(default_factory=list)
@@ -146,6 +160,21 @@ class EATResult:
     phase1_epochs: int = 0
     host_draws_phase1: int = 0         # host NumPy mini-epoch draws in phase-1
                                        # (0 under async_personalize)
+    host_draws_phase0: int = 0         # host NumPy epoch draws in phase-0
+                                       # (0 under async_generalize)
+    # per-epoch TRAIN iteration counts in phase-0 — the deterministic
+    # work-based witness that CBS mini-epochs shorten the epoch (the
+    # wall-clock claim's machine-load-independent proxy)
+    phase0_iter_history: list[int] = field(default_factory=list)
+    # TOTAL host→device payload across all phase-0 epochs: stacked batch
+    # arrays on the host-sampled path, just the (P, 2) PRNG keys per epoch
+    # on the async path (divide by epochs for the per-epoch payload)
+    host_to_device_bytes_phase0: int = 0
+    # mean phase-0 epoch period INCLUDING the validation eval's 1/N share —
+    # the apples-to-apples number against the fused async epoch, whose one
+    # device call is inseparable from its eval (epoch_time_s excludes eval
+    # wherever eval is a separately-compiled call)
+    epoch_time_with_eval_s: float = 0.0
 
     def summary(self) -> dict:
         return {
@@ -158,6 +187,7 @@ class EATResult:
             "weighted_f1": round(self.f1.weighted * 100, 2),
             "train_time_s": round(self.train_time_s, 2),
             "epoch_time_s": round(self.epoch_time_s, 3),
+            "epoch_time_with_eval_s": round(self.epoch_time_with_eval_s, 4),
             "epochs": self.epochs_run,
             "personalize_start": self.personalize_start_epoch,
             "avg_entropy": round(float(self.partition_entropies.mean()), 4),
@@ -170,8 +200,14 @@ class EATResult:
             "phase1_time_s": round(self.phase1_time_s, 3),
             "phase1_epochs": self.phase1_epochs,
             "async_personalize": self.config.async_personalize,
+            "async_generalize": self.config.async_generalize,
             "overlap_halo": self.config.overlap_halo,
             "full_graph_train": self.config.full_graph_train,
+            "phase0_iters_per_epoch": (
+                round(float(np.mean(self.phase0_iter_history)), 2)
+                if self.phase0_iter_history else 0.0),
+            "host_to_device_mb_phase0": round(
+                self.host_to_device_bytes_phase0 / 1e6, 3),
         }
 
     def _label(self) -> str:
@@ -340,6 +376,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     ctrl = GPController(num_partitions=n_parts, config=sched)
     sim_time = 0.0
     epoch_times: list[float] = []
+    epoch_times_with_eval: list[float] = []
     comm_grad = 0
     comm_halo_p0 = 0
     comm_halo_p1 = 0
@@ -347,14 +384,39 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     loss_hist: list[float] = []
     val_hist: list[float] = []
 
-    prefetch = (_EpochPrefetcher(
-        lambda: stack_epoch_batches(samplers, make_batch, n_parts))
-        if cfg.double_buffer else None)
+    # the prefetcher exists only where host sampling does: it is created
+    # lazily by the first epoch that draws on the host, so fully-async runs
+    # never construct it (the phase-0 host-isolation contract)
+    prefetch = None
 
     def next_epoch_batches():
-        if prefetch is not None:
+        nonlocal prefetch
+        if cfg.double_buffer:
+            if prefetch is None:
+                prefetch = _EpochPrefetcher(
+                    lambda: stack_epoch_batches(samplers, make_batch, n_parts))
             return prefetch.next()
         return stack_epoch_batches(samplers, make_batch, n_parts)
+
+    # ONE device sampler serves both async phases (Eq. 3 / uniform logp +
+    # fanout structure + features); staged lazily by the first phase that
+    # needs it, so it never pins a replicated feature copy it won't use
+    async_phase0 = cfg.async_generalize and not cfg.full_graph_train
+    dev_sampler = None
+
+    def stage_device_sampler():
+        nonlocal dev_sampler
+        if dev_sampler is None:
+            dev_sampler = build_device_epoch_sampler(
+                graph, host_train, n_parts, batch_size=cfg.batch_size,
+                subset_fraction=cfg.subset_fraction if cfg.use_cbs else 1.0,
+                class_balanced=cfg.use_cbs, fanouts=cfg.fanouts)
+        return dev_sampler
+
+    if async_phase0:
+        engine.set_device_sampler(stage_device_sampler())
+        p0_base_keys = jax.random.split(
+            jax.random.PRNGKey(cfg.seed ^ 0x6E02), n_parts)
 
     def epoch_host_times(t_host, t_dev):
         # synchronous epoch: everyone waits for the slowest host; the fused
@@ -374,6 +436,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                                * cfg.full_graph_iters
                                + 2 * pg.halo_bytes_per_layer)
 
+    host_to_device_p0 = 0
+    p0_iter_hist: list[int] = []
+    draws_at_p0_start = host_draw_count()
     while not ctrl.done and ctrl.phase == 0:
         if cfg.full_graph_train:
             params, opt_state, losses, val_micro, t_dev = (
@@ -382,15 +447,36 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
             iters = np.asarray(losses).shape[0]
             t_host = np.zeros(n_parts)      # no host sampling on this path
             comm_halo_p0 += fg_halo_bytes_per_epoch
+        elif async_phase0:
+            # one device program per epoch: draw + train scan + fused eval.
+            # The only host→device payload is the per-partition PRNG keys.
+            keys = jax.vmap(jax.random.fold_in, (0, None))(
+                p0_base_keys, ctrl.epoch)
+            params, opt_state, losses, val_micro, t_dev = (
+                engine.phase0_epoch_async(params, opt_state, keys))
+            iters = np.asarray(losses).shape[0]
+            t_host = np.zeros(n_parts)      # no host sampling on this path
+            host_to_device_p0 += np.asarray(keys).nbytes
+            comm_halo_p0 += halo_bytes_per_epoch
         else:
             batches, t_host, iters = next_epoch_batches()
+            host_to_device_p0 += sum(
+                l.size * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(batches))
             params, opt_state, losses, val_micro, t_dev = engine.phase0_epoch(
                 params, opt_state, batches)
             comm_halo_p0 += halo_bytes_per_epoch
         comm_grad += grad_bytes_per_sync * n_parts * iters
+        p0_iter_hist.append(int(iters))
         host_time = epoch_host_times(t_host, t_dev)
         sim_time += float(host_time.max())
         epoch_times.append(float(host_time.max()))
+        # eval-inclusive epoch period: a separately-compiled eval (host and
+        # full-graph paths) adds its 1/N share; the fused async epoch's
+        # t_dev already contains it (last_eval_seconds is 0 there)
+        epoch_times_with_eval.append(
+            float(host_time.max())
+            + getattr(engine, "last_eval_seconds", 0.0) / n_parts)
 
         mean_loss = float(np.asarray(losses).mean())
         mean_val = float(np.asarray(val_micro).mean())
@@ -406,6 +492,12 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         elif not cfg.use_gp and ctrl.phase0_stopper.stopped:
             break
 
+    if prefetch is not None:
+        prefetch.settle()       # quiesce the worker: race-free snapshot
+    # sync note: with the prefetcher the tally includes the speculative
+    # next-epoch draw that overlapped the last phase-0 device step
+    host_draws_p0 = host_draw_count() - draws_at_p0_start
+
     personalize_start = ctrl.personalize_start_epoch
 
     # ---------------- phase 1: personalization ----------------------------
@@ -420,18 +512,15 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                          for p in range(n_parts)]
         host_elapsed = np.zeros(n_parts)
 
-        dev_sampler = None
         if cfg.async_personalize:
             # from here on the mini-epoch path is one device program: join
-            # and discard any in-flight host draw, then stage the device
-            # sampler (Eq. 3 + fanout structure + features, once)
+            # and discard any in-flight host draw, then attach the device
+            # sampler staged before phase-0 (ONE sampler serves both phases;
+            # already attached when phase-0 ran async)
             if prefetch is not None:
                 prefetch.close()
-            dev_sampler = build_device_epoch_sampler(
-                graph, host_train, n_parts, batch_size=cfg.batch_size,
-                subset_fraction=cfg.subset_fraction if cfg.use_cbs else 1.0,
-                class_balanced=cfg.use_cbs, fanouts=cfg.fanouts)
-            engine.set_device_sampler(dev_sampler)
+            if not async_phase0:
+                engine.set_device_sampler(stage_device_sampler())
             base_keys = jax.random.split(
                 jax.random.PRNGKey(cfg.seed ^ 0xCB5D), n_parts)
         elif prefetch is not None:
@@ -507,6 +596,8 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         partition_entropies=ents, partition_time_s=p_time, weight_time_s=w_time,
         train_time_s=sim_time,
         epoch_time_s=float(np.mean(epoch_times)) if epoch_times else 0.0,
+        epoch_time_with_eval_s=(float(np.mean(epoch_times_with_eval))
+                                if epoch_times_with_eval else 0.0),
         epochs_run=ctrl.epoch, personalize_start_epoch=personalize_start,
         loss_history=loss_hist, val_history=val_hist,
         comm_grad_bytes=comm_grad,
@@ -517,4 +608,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         engine_mode=engine.mode,
         phase1_time_s=phase1_time, phase1_epochs=phase1_epochs,
         host_draws_phase1=host_draws_p1,
+        host_draws_phase0=host_draws_p0,
+        phase0_iter_history=p0_iter_hist,
+        host_to_device_bytes_phase0=host_to_device_p0,
     )

@@ -13,7 +13,14 @@ statistically rather than bit-for-bit:
      (distinct picks, exact size, zero-probability nodes never drawn);
   4. the async phase-1 path performs ZERO host mini-epoch draws — the
      call-counter check behind the "no host NumPy on the mini-epoch path"
-     acceptance criterion — while staging the device draw.
+     acceptance criterion — while staging the device draw;
+  5. the phase-0 epoch draw (PR 5): chi-squared on 60k draws for the
+     uniform path (end to end through ``draw_epoch``) AND the CBS-weighted
+     path, plus permutation validity — each epoch visits each valid index
+     at most once before the next key reshuffles;
+  6. phase-0 host isolation: across async generalization epochs the host
+     RNG draw counter stays at 0 and ``_EpochPrefetcher`` is never
+     constructed.
 
 All seeds are fixed: every assertion is deterministic.
 """
@@ -255,6 +262,113 @@ def test_epoch_sampler_caps_mini_epoch_at_support():
 
 
 # --------------------------------------------------------------------------
+# 5. phase-0 epoch draw (the PR-5 generalization): uniform-path and
+#    CBS-path statistics + the permutation-validity property
+# --------------------------------------------------------------------------
+
+def _phase0_sampler(class_balanced: bool, n: int = 160, seed: int = 6):
+    """A DeviceEpochSampler staged the way the async phase-0 path stages it
+    (build_device_epoch_sampler over a graph + per-host train sets)."""
+    from repro.core.sampler import build_device_epoch_sampler
+
+    class G:
+        pass
+
+    indptr, indices, labels, train_idx = _graph("powerlaw", seed, n)
+    g = G()
+    g.indptr, g.indices, g.labels = indptr, indices, labels
+    g.features = np.random.default_rng(seed).normal(
+        0, 1, (n, 8)).astype(np.float32)
+    half = len(train_idx) // 2
+    host_train = [train_idx[:half], train_idx[half:]]
+    ds = build_device_epoch_sampler(
+        g, host_train, 2, batch_size=32,
+        subset_fraction=0.25 if class_balanced else 1.0,
+        class_balanced=class_balanced, fanouts=(3, 3))
+    return ds, host_train
+
+
+def test_phase0_uniform_draw_is_uniform_chisquared():
+    """The uniform (no-CBS) phase-0 path END TO END through the production
+    ``draw_epoch``: the first batch slot of the drawn-and-shuffled epoch is
+    a uniform categorical over the partition's train set — chi-squared on
+    60k device draws."""
+    import jax
+
+    ds, host_train = _phase0_sampler(class_balanced=False)
+    p = 0
+    t = len(host_train[p])
+
+    def first_slot(key):
+        nodes, _ = ds.draw_epoch(key, ds.logp[p], ds.train_idx[p], ds.k[p])
+        return nodes[0, 0]
+
+    keys = jax.random.split(jax.random.PRNGKey(991), N_DRAWS)
+    first = np.asarray(jax.vmap(first_slot)(keys))
+    # every draw lands on a real train node of this partition
+    assert set(first.tolist()) <= set(host_train[p].tolist())
+    counts = np.zeros(t, np.float64)
+    for i, v in enumerate(host_train[p]):
+        counts[i] = (first == v).sum()
+    res = _merged_chisquare(counts, np.full(t, 1.0 / t))
+    assert res.pvalue > ALPHA, res
+
+
+def test_phase0_cbs_draw_follows_eq3_chisquared():
+    """The CBS-weighted phase-0 path: the first slot of the Gumbel top-k
+    ranking over the sampler's STAGED per-partition log-Eq.3 row is exactly
+    a categorical(Eq. 3) sample — chi-squared on 60k device draws against
+    the staged probabilities (the shuffle on top is covered by the uniform
+    end-to-end test and the permutation property below)."""
+    import jax
+
+    from repro.core.sampler import gumbel_subset
+
+    ds, host_train = _phase0_sampler(class_balanced=True)
+    p = 1
+    logp = np.asarray(ds.logp[p], np.float64)
+    probs = np.exp(logp)
+    probs /= probs.sum()
+    keys = jax.random.split(jax.random.PRNGKey(41), N_DRAWS)
+    first = np.asarray(
+        jax.vmap(lambda k: gumbel_subset(k, ds.logp[p], 1)[0])(keys))
+    counts = np.bincount(first, minlength=len(probs)).astype(np.float64)
+    assert counts[probs == 0].sum() == 0
+    res = _merged_chisquare(counts, probs)
+    assert res.pvalue > ALPHA, res
+
+
+@pytest.mark.parametrize("class_balanced", [True, False])
+def test_phase0_epoch_is_valid_permutation(class_balanced):
+    """Permutation validity of the phase-0 epoch: within one epoch each
+    valid index is visited AT MOST once (exactly k distinct nodes), the
+    uniform path covers the full train set exactly once, and a fresh epoch
+    key reshuffles (different batch order)."""
+    import jax
+
+    ds, host_train = _phase0_sampler(class_balanced=class_balanced)
+    orders = []
+    for p in range(2):
+        for epoch in (0, 1, 2):
+            key = jax.random.fold_in(jax.random.PRNGKey(17 + p), epoch)
+            nodes, valid = jax.tree.map(
+                np.asarray,
+                ds.draw_epoch(key, ds.logp[p], ds.train_idx[p], ds.k[p]))
+            picked = nodes.reshape(-1)[valid.reshape(-1)]
+            assert len(picked) == int(ds.k[p])
+            assert len(np.unique(picked)) == len(picked)   # no revisits
+            assert set(picked.tolist()) <= set(host_train[p].tolist())
+            if not class_balanced:
+                # uniform epoch == one full pass over the local train set
+                assert sorted(picked.tolist()) == sorted(
+                    host_train[p].tolist())
+            if p == 0:
+                orders.append(tuple(picked.tolist()))
+    # reshuffle across epochs: the three epoch orders are not all identical
+    assert len(set(orders)) > 1
+
+
+# --------------------------------------------------------------------------
 # 4. the acceptance call-counter: async phase-1 never draws on host
 # --------------------------------------------------------------------------
 
@@ -284,5 +398,59 @@ def test_async_phase1_no_host_numpy_draw(async_run):
 
 def test_async_phase1_still_learns(async_run):
     result, _ = async_run
+    assert result.f1.micro > 0.30
+    assert np.isfinite(result.loss_history).all()
+
+
+# --------------------------------------------------------------------------
+# 6. phase-0 host isolation: the fused generalization epoch never touches
+#    the host RNG and never constructs the prefetcher
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def async_phase0_run():
+    from repro import pipeline
+    from repro.core.sampler import cbs, cbs_device
+    from repro.pipeline import EATConfig, run_eat_distgnn
+
+    class _ForbiddenPrefetcher:
+        def __init__(self, *a, **k):
+            raise AssertionError(
+                "_EpochPrefetcher constructed on the fully-async path")
+
+    host_before = cbs.host_draw_count()
+    dev_before = cbs_device.device_trace_count()
+    orig = pipeline._EpochPrefetcher
+    pipeline._EpochPrefetcher = _ForbiddenPrefetcher
+    try:
+        cfg = EATConfig(dataset="tiny", num_parts=4, partition_method="ew",
+                        use_cbs=True, use_gp=True, max_epochs=12,
+                        hidden_dim=32, batch_size=64, fanouts=(3, 3),
+                        lr=3e-3, seed=0, flatten_tol=0.08,
+                        async_generalize=True, async_personalize=True)
+        result = run_eat_distgnn(cfg)
+    finally:
+        pipeline._EpochPrefetcher = orig
+    return (result, cbs.host_draw_count() - host_before,
+            cbs_device.device_trace_count() - dev_before)
+
+
+def test_async_phase0_no_host_numpy_draw(async_phase0_run):
+    """Mirror of test_async_phase1_no_host_numpy_draw for generalization:
+    across async phase-0 epochs the host RNG draw counter stays at 0, the
+    device draw is demonstrably staged, and ``_EpochPrefetcher`` is never
+    constructed (the fixture swaps in a constructor that raises)."""
+    result, host_delta, dev_traces = async_phase0_run
+    assert result.epochs_run > 0 and result.phase1_epochs > 0
+    assert result.host_draws_phase0 == 0, (
+        f"{result.host_draws_phase0} host NumPy epoch draws leaked onto "
+        "the async phase-0 path")
+    assert result.host_draws_phase1 == 0
+    assert host_delta == 0, f"host RNG drew {host_delta} times"
+    assert dev_traces > 0, "the device epoch draw was never staged"
+
+
+def test_async_phase0_still_learns(async_phase0_run):
+    result, _, _ = async_phase0_run
     assert result.f1.micro > 0.30
     assert np.isfinite(result.loss_history).all()

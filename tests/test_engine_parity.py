@@ -12,6 +12,11 @@
 3. Async-path parity: the fully-on-device phase-1 (device CBS draw + fanout
    + gather inside the fused step) matches the sequential reference running
    the SAME PRNG programs one partition at a time, bit-for-bit in fp64.
+   Likewise the fused phase-0 program (epoch draw + train scan + FUSED
+   validation eval, with and without CBS) — stacked in the shared
+   subprocess, AND under shard_map on a real 4-device mesh (bitwise there
+   too: its only collectives are data movement, no pmean), with the fused
+   eval bitwise equal to a standalone evaluate().
 4. shard_map mode: with 4 forced host devices the mesh engine matches the
    stacked engine to collective-reduction rounding (<= a few f32 ulps).
 5. Pallas on the hot path: the distributed eval forward demonstrably stages
@@ -224,6 +229,38 @@ def run_fullgraph_parity(eng, seq, model, opt, seed, dtype, iters=2):
             "opt": tree_maxdiff(oA, oB)}
 
 
+def run_phase0_async_parity(eng, seq, g, host_train, model, opt, seed, dtype):
+    '''Fused phase-0 device program (on-device epoch draw + synchronous
+    train scan with the cross-partition gradient mean + the FUSED validation
+    eval) vs the sequential oracle running the SAME PRNG programs — for the
+    CBS-weighted draw AND the uniform no-CBS shuffle — plus the fused-eval
+    == standalone evaluate() bitwise check.'''
+    out = {}
+    for tag, cbs in (("cbs", True), ("uni", False)):
+        ds = build_device_epoch_sampler(g, host_train, P, batch_size=BATCH,
+                                        subset_fraction=0.25 if cbs else 1.0,
+                                        class_balanced=cbs, fanouts=(3, 3),
+                                        dtype=dtype)
+        eng.set_device_sampler(ds)
+        seq.set_device_sampler(ds)
+        params = jax.tree.map(lambda x: jnp.asarray(x, dtype),
+                              model.init(seed))
+        opt_state = opt.init(params)
+        keys = jax.random.split(jax.random.PRNGKey(seed ^ 0x6E02), P)
+        pA, oA, lA, vA, _ = eng.phase0_epoch_async(params, opt_state, keys)
+        pB, oB, lB, vB, _ = seq.phase0_epoch_async(params, opt_state, keys)
+        out[f"{tag}_params"] = tree_maxdiff(pA, pB)
+        out[f"{tag}_opt"] = tree_maxdiff(oA, oB)
+        out[f"{tag}_loss"] = float(np.abs(np.asarray(lA)
+                                          - np.asarray(lB)).max())
+        out[f"{tag}_val"] = float(np.abs(np.asarray(vA)
+                                         - np.asarray(vB)).max())
+        mS, _ = eng.evaluate(pA, "val", per_partition_params=False)
+        out[f"{tag}_fused_eval"] = float(np.abs(np.asarray(vA)
+                                                - np.asarray(mS)).max())
+    return out
+
+
 def run_async_parity(eng, seq, g, host_train, model, opt, seed, dtype):
     '''Fully-on-device phase-1 (device CBS draw + fanout + gather inside the
     fused step) vs the sequential reference running the SAME PRNG programs.'''
@@ -272,6 +309,8 @@ out["budget"] = run_budget_parity(eng, seq, model, opt, samplers, make_batch,
                                   0, jnp.float64)
 out["async"] = run_async_parity(eng, seq, g, host_train, model, opt, 0,
                                 jnp.float64)
+out["phase0_async"] = run_phase0_async_parity(eng, seq, g, host_train, model,
+                                              opt, 0, jnp.float64)
 out["overlap"] = run_overlap_parity(pg, model, loss_fn, opt, samplers,
                                     make_batch, 0, jnp.float64)
 out["fullgraph"] = run_fullgraph_parity(eng, seq, model, opt, 0, jnp.float64)
@@ -313,6 +352,15 @@ def test_async_device_sampling_parity_fp64(fp64_shared):
     """The fully-on-device async phase-1 == sequential reference running the
     same per-partition PRNG programs, bit-for-bit in fp64."""
     assert all(v == 0 for v in fp64_shared["async"].values()), fp64_shared["async"]
+
+
+def test_phase0_async_parity_fp64(fp64_shared):
+    """The fused phase-0 device program (epoch draw + train scan + fused
+    eval) == the sequential oracle running the same PRNG programs, bit-for-
+    bit in fp64, with AND without CBS; the fused eval == a standalone
+    evaluate() on the resulting params, also bitwise."""
+    assert all(v == 0 for v in fp64_shared["phase0_async"].values()), \
+        fp64_shared["phase0_async"]
 
 
 def test_overlap_split_forward_parity_fp64(fp64_shared):
@@ -418,6 +466,45 @@ def test_spmd_shard_map_matches_stacked():
     assert d["p0_params"] <= 1e-6 and d["p1_params"] <= 1e-5, d
     assert d["p0_val"] <= 5e-3 and d["p1_val"] <= 5e-3, d
     assert d["test_micro"] <= 5e-3 and d["test_pred_mismatch"] <= 3, d
+
+
+SPMD_FP64_ASYNC_SCRIPT = (
+    "import os\n"
+    "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'\n"
+    + CACHE_PRELUDE
+    + "jax.config.update('jax_enable_x64', True)\n"
+    + HARNESS
+    + r"""
+import json
+g, pg, model, loss_fn, opt, samplers, make_batch, host_train = build_case(
+    "ew", 0, True, np.float64)
+cfg = EngineConfig(mode="spmd", use_pallas_agg=False, dtype=jnp.float64)
+cfgS = EngineConfig(mode="stacked", use_pallas_agg=False, dtype=jnp.float64)
+eng = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(), cfg)
+assert eng.mode == "spmd", eng.mode
+seq = SequentialReference(model, loss_fn, opt, pg, GPHyperParams(), cfgS)
+d = run_phase0_async_parity(eng, seq, g, host_train, model, opt, 0,
+                            jnp.float64)
+print("RESULTS", json.dumps(d))
+"""
+)
+
+
+def test_phase0_async_spmd_parity_fp64():
+    """The fused phase-0 program under shard_map on a REAL 4-device
+    partition mesh == the sequential oracle, bit-for-bit in fp64 (CBS and
+    uniform draws).  Bitwise across a real mesh is achievable because the
+    program's only collectives are pure data movement (the epoch has no
+    pmean: the gradient all-reduce is an all_gather followed by the same
+    deterministic local stack-sum the oracle performs, and the fused eval's
+    exchange is an all_to_all)."""
+    res = subprocess.run([sys.executable, "-c", SPMD_FP64_ASYNC_SCRIPT],
+                         capture_output=True, text=True, timeout=1800,
+                         env=SUBPROC_ENV)
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULTS")][0]
+    d = json.loads(line[len("RESULTS "):])
+    assert all(v == 0 for v in d.values()), d
 
 
 # --------------------------------------------------------------------------

@@ -7,6 +7,8 @@ tiny synthetic benchmark and assert the paper's three behavioural claims:
   2. personalization actually starts and contributes (the Fig. 3 jump);
   3. CBS mini-epochs shorten the epoch (the 2-3x epoch-time mechanism).
 """
+import functools
+
 import numpy as np
 import pytest
 
@@ -41,16 +43,38 @@ def test_personalization_started_and_helped(full_run):
     assert post >= pre  # Fig. 3: micro-F1 jump (or at least no regression)
 
 
-def test_cbs_shortens_epoch():
+@functools.lru_cache(maxsize=1)
+def _cbs_ablation_runs():
     base = EATConfig(dataset="tiny", num_parts=2, partition_method="metis",
                      use_cbs=False, use_gp=False, max_epochs=2,
                      hidden_dim=32, batch_size=64, fanouts=(5, 5), seed=1)
     cbs = EATConfig(dataset="tiny", num_parts=2, partition_method="metis",
                     use_cbs=True, use_gp=False, max_epochs=2,
                     hidden_dim=32, batch_size=64, fanouts=(5, 5), seed=1)
-    r_base = run_eat_distgnn(base)
-    r_cbs = run_eat_distgnn(cbs)
-    # mini-epoch = 25% of train nodes -> strictly fewer iterations
+    return run_eat_distgnn(base), run_eat_distgnn(cbs)
+
+
+def test_cbs_shortens_epoch():
+    """CBS mini-epochs do strictly less WORK per epoch: fewer training
+    batches drawn (25% mini-epochs vs the full train set).  Deterministic —
+    scan lengths, not wall clock, so machine load cannot flake it; the
+    wall-clock rendering of the same claim lives in the `timing` lane
+    (test_cbs_shortens_epoch_wallclock)."""
+    r_base, r_cbs = _cbs_ablation_runs()
+    assert r_base.phase0_iter_history and r_cbs.phase0_iter_history
+    assert len(r_cbs.phase0_iter_history) == len(r_base.phase0_iter_history)
+    # mini-epoch = 25% of train nodes -> strictly fewer batches EVERY epoch
+    assert max(r_cbs.phase0_iter_history) < min(r_base.phase0_iter_history), (
+        r_cbs.phase0_iter_history, r_base.phase0_iter_history)
+
+
+@pytest.mark.timing
+def test_cbs_shortens_epoch_wallclock():
+    """The paper's wall-clock claim (the 2-3x epoch-time mechanism).  Wall
+    time depends on machine load, so this runs in the quarantined `timing`
+    lane of scripts/ci.sh: one automatic retry, excluded from the 30 s
+    runtime gate and from tier-1."""
+    r_base, r_cbs = _cbs_ablation_runs()
     assert r_cbs.epoch_time_s < r_base.epoch_time_s
 
 
