@@ -11,6 +11,10 @@
 #   scripts/ci.sh grad     grad-parity smoke only: jax.grad through the
 #                          custom-VJP Pallas aggregation op vs the jnp
 #                          reference, with fwd+bwd kernel-staging evidence
+#   scripts/ci.sh halo-cache
+#                          halo-cache smoke only: staleness 0 bitwise vs the
+#                          sync eval forward + pure-cached evals ship zero
+#                          halo bytes
 #   scripts/ci.sh timing   the timing quarantine lane only: wall-clock-
 #                          sensitive tests, one automatic retry, never part
 #                          of the 30 s runtime gate
@@ -92,7 +96,59 @@ if [ "$mode" = "grad" ]; then
     exit 0
 fi
 
+# ---- halo-cache smoke ------------------------------------------------------
+# Second fail-fast witness: the historical-embedding halo cache.  At refresh
+# cadence 1 the cached eval forward must be BITWISE the sync forward (same
+# trace structure, full exchange every eval); at cadence 2 the pure-cached
+# eval must report zero halo bytes while the refresh eval reports the full
+# two-layer payload.  ~15 s on the tiny benchmark; the fp64 oracle tier runs
+# minutes later in tests/test_engine_parity.py.
+halo_cache_smoke() {
+    python - <<'PY'
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import partition_graph, GPHyperParams
+from repro.engine import EngineConfig, SPMDEngine
+from repro.graph import (BENCHMARKS, GraphSAGE, build_partitioned_graph,
+                         make_benchmark)
+from repro.train.optim import AdamW
+
+g = make_benchmark(BENCHMARKS["tiny"])
+r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                    method="ew", seed=0)
+pg = build_partitioned_graph(g, r.parts, 4)
+model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                  num_classes=g.num_classes)
+mk = lambda **kw: SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3),
+                             pg, GPHyperParams(),
+                             EngineConfig(mode="stacked",
+                                          use_pallas_agg=False, **kw))
+sync = mk()
+k1 = mk(halo_cache=True, halo_refresh_every=1)
+k2 = mk(halo_cache=True, halo_refresh_every=2)
+full = 2 * pg.halo_bytes_per_layer
+k2_bytes = []
+for i in range(2):
+    prm = jax.tree.map(lambda x: x * (1.0 + 0.1 * i), model.init(0))
+    mS, prS = sync.evaluate(prm, "val", per_partition_params=False)
+    mC, prC = k1.evaluate(prm, "val", per_partition_params=False)
+    assert float(jnp.abs(mS - mC).max()) == 0.0, "staleness-0 micro drifted"
+    assert (np.asarray(prS) == np.asarray(prC)).all(), \
+        "staleness-0 preds drifted"
+    assert k1.last_halo_exchange_bytes == full, k1.last_halo_exchange_bytes
+    k2.evaluate(prm, "val", per_partition_params=False)
+    k2_bytes.append(k2.last_halo_exchange_bytes)
+assert k2_bytes == [full, 0], k2_bytes
+print(f"halo-cache smoke OK (staleness 0 bitwise; K=2 bytes {k2_bytes})")
+PY
+}
+
+if [ "$mode" = "halo-cache" ]; then
+    halo_cache_smoke || exit 1
+    exit 0
+fi
+
 grad_smoke || { echo "REGRESSION: grad-parity smoke failed"; exit 1; }
+halo_cache_smoke || { echo "REGRESSION: halo-cache smoke failed"; exit 1; }
 
 out=$(python -m pytest -m "not slow and not timing" -q --durations=0 2>&1)
 pytest_status=$?

@@ -62,9 +62,12 @@ class PartitionStats:
 
     num_parts: int
     sizes: np.ndarray               # nodes per partition
+    labelled_sizes: np.ndarray      # LABELLED nodes per partition — the mass
+                                    # the entropies describe (labels < 0 are
+                                    # invisible to label_entropy)
     entropies: np.ndarray           # per-partition label entropy (nats)
     avg_entropy: float              # H(P) as in Table V (mean over partitions)
-    total_entropy: float            # size-weighted sum (the EW objective)
+    total_entropy: float            # labelled-count-weighted sum (EW objective)
     entropy_variance: float         # the macro-F1 variant balances this
     edge_cut: int                   # raw #cut edges
     weighted_edge_cut: float        # sum of weights of cut edges
@@ -90,7 +93,13 @@ def partition_stats(
 ) -> PartitionStats:
     """Full partition-quality report over a CSR graph."""
     parts = np.asarray(parts)
+    labels = np.asarray(labels)
     sizes = np.bincount(parts, minlength=num_parts)
+    # each partition's entropy is computed over its LABELLED nodes only
+    # (label_entropy drops labels < 0), so the weighted aggregates must use
+    # the same mass — full sizes would let unlabelled nodes (~98% on
+    # papers-like graphs) skew the EW objective
+    lab_sizes = np.bincount(parts[labels >= 0], minlength=num_parts)
     ents = partition_entropies(labels, parts, num_parts, num_classes)
 
     # cut edges: CSR row u -> indices[indptr[u]:indptr[u+1]]
@@ -102,11 +111,12 @@ def partition_stats(
     else:
         wcut = float(np.asarray(edge_weights)[cut_mask].sum())
 
-    weights = sizes / max(1, sizes.sum())
-    total_entropy = float((ents * sizes).sum())
+    weights = lab_sizes / max(1, lab_sizes.sum())
+    total_entropy = float((ents * lab_sizes).sum())
     return PartitionStats(
         num_parts=num_parts,
         sizes=sizes,
+        labelled_sizes=lab_sizes,
         entropies=ents,
         avg_entropy=float(ents.mean()),
         total_entropy=total_entropy,

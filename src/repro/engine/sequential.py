@@ -18,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.gp.trainer import GPHyperParams, make_personalize_partition_step
-from ..graph.distributed import (PartitionedGraph, make_ref_mean_agg,
-                                 make_ref_split_agg)
+from ..graph.distributed import (PartitionedGraph, halo_refresh_plan,
+                                 make_ref_mean_agg, make_ref_split_agg)
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 
@@ -76,6 +76,31 @@ class SequentialReference:
                  "edge_mask": jnp.asarray(pg.edge_mask[p], f)}
                 for p in range(pg.num_parts)
             ]
+        self.halo_cache = bool(getattr(config, "halo_cache", False))
+        self.last_halo_exchange_bytes = 0
+        if self.halo_cache:
+            if self.overlap:
+                raise ValueError(
+                    "halo_cache and overlap_halo are alternative exchange "
+                    "optimisations: the cache removes the very exchange the "
+                    "overlap would hide — pick one")
+            self.halo_refresh_every = int(getattr(config,
+                                                  "halo_refresh_every", 1))
+            self.halo_cv = bool(getattr(config, "halo_cv", False))
+            self.max_send = pg.send_idx.shape[-1]
+            self._halo_slot_counts = np.asarray(pg.send_mask).sum(axis=(0, 1))
+            self._halo_byte_per_slot = (pg.features.shape[-1]
+                                        * pg.features.dtype.itemsize)
+            # per-partition recv buffers, one per layer — the legible
+            # rendering of the engine's stacked (P, P, maxS, D) cache state
+            Pn = pg.num_parts
+            self._halo_state = {
+                "h0": [jnp.zeros((Pn, self.max_send, pg.features.shape[-1]),
+                                 f) for _ in range(Pn)],
+                "h1": [jnp.zeros((Pn, self.max_send, model.hidden_dim), f)
+                       for _ in range(Pn)],
+            }
+            self._halo_age = 0
         self._grad_step = jax.jit(jax.value_and_grad(loss_fn))
         self._pstep1 = jax.jit(make_personalize_partition_step(
             loss_fn, optimizer, hp))
@@ -114,11 +139,72 @@ class SequentialReference:
             out.append(hs[q].at[flat_pos].set(flat_val.astype(hs[q].dtype)))
         return out
 
+    def _exchange_cached(self, hs: list, key: str, lo: int, hi: int) -> list:
+        """Historical-cache variant of :meth:`_exchange`: land each
+        partition's CACHED recv buffers into the halo slots, then exchange
+        only send slots ``[lo, hi)`` live and overwrite both the halo rows
+        and the cache with the refreshed values.  The full-refresh case
+        skips the cache landing entirely, so its op sequence is exactly
+        :meth:`_exchange` (the staleness-0 bitwise contract).  Mutates
+        ``self._halo_state[key]``."""
+        P = self.num_parts
+        full = lo == 0 and hi == self.max_send
+        cache = self._halo_state[key]
+        if hi > lo:
+            # gather BEFORE any cache landing (send_idx only ever points at
+            # owned rows, and the engine's cached forward uses this order)
+            sent = [hs[p][self.send_idx[p][:, lo:hi]]
+                    * self.send_mask[p][:, lo:hi][..., None]
+                    for p in range(P)]
+        out = []
+        for q in range(P):
+            h = hs[q]
+            if not full:
+                h = h.at[self.recv_pos[q].reshape(-1)].set(
+                    cache[q].reshape(-1, h.shape[-1]).astype(h.dtype))
+            if hi > lo:
+                recv = jnp.stack([sent[p][q] for p in range(P)])
+                h = h.at[self.recv_pos[q][:, lo:hi].reshape(-1)].set(
+                    recv.reshape(-1, h.shape[-1]).astype(h.dtype))
+                cache[q] = cache[q].at[:, lo:hi].set(
+                    recv.astype(cache[q].dtype))
+            out.append(h)
+        return out
+
+    def _full_forward_cached(self, params_list: list) -> list:
+        """The cached eval forward: same layer schedule as
+        :meth:`_full_forward`, halo rows served from the historical cache
+        with the refresh slot range chosen by :func:`halo_refresh_plan`.
+        Ages the cache once per call and records the refreshed payload in
+        ``last_halo_exchange_bytes``."""
+        P = self.num_parts
+        lo, hi = halo_refresh_plan(self._halo_age, self.halo_refresh_every,
+                                   self.halo_cv, self.max_send)
+        hs = [self.features[p] for p in range(P)]
+        hs = self._exchange_cached(hs, "h0", lo, hi)
+        h1 = []
+        for p in range(P):
+            lp = params_list[p].layer1
+            agg = self._agg(hs[p], self._edge_shards[p])
+            h1.append(jax.nn.relu(hs[p] @ lp.w_self + agg @ lp.w_neigh + lp.b))
+        h1 = self._exchange_cached(h1, "h1", lo, hi)
+        logits = []
+        for p in range(P):
+            lp = params_list[p].layer2
+            agg = self._agg(h1[p], self._edge_shards[p])
+            logits.append(h1[p] @ lp.w_self + agg @ lp.w_neigh + lp.b)
+        real = int(self._halo_slot_counts[lo:hi].sum())
+        self.last_halo_exchange_bytes = 2 * real * self._halo_byte_per_slot
+        self._halo_age += 1
+        return logits
+
     def _full_forward(self, params_list: list) -> list:
         """Layer-synchronous 2-layer GraphSAGE over all partitions — the same
         schedule the per-shard fwd runs, unrolled in Python."""
         if self.overlap:
             return self._full_forward_overlap(params_list)
+        if self.halo_cache:
+            return self._full_forward_cached(params_list)
         P = self.num_parts
         hs = [self.features[p] for p in range(P)]
         hs = self._exchange(hs)
@@ -279,6 +365,12 @@ class SequentialReference:
         import time
 
         from functools import partial
+
+        if self.halo_cache:
+            raise ValueError(
+                "halo_cache is an eval-forward optimisation; full-graph "
+                "training differentiates through the live halo exchange "
+                "and cannot train against stale cached embeddings")
 
         from ..train.losses import cross_entropy_loss, focal_loss
 

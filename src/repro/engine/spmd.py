@@ -40,14 +40,16 @@ from jax.sharding import PartitionSpec as P
 from ..core.gp.trainer import (GPHyperParams, make_fullgraph_loss_fn,
                                make_personalize_partition_step,
                                make_personalize_step)
-from ..graph.distributed import (PartitionedGraph, make_distributed_forward,
+from ..graph.distributed import (PartitionedGraph, halo_refresh_plan,
+                                 make_cached_forward, make_distributed_forward,
                                  make_overlap_forward, make_pallas_mean_agg,
                                  make_pallas_split_agg, make_ref_mean_agg,
                                  make_ref_split_agg)
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 from .compat import shard_map_compat
-from .stacking import (build_stacked_split_vjp_blocks,
+from .stacking import (build_stacked_halo_cache,
+                       build_stacked_split_vjp_blocks,
                        build_stacked_vjp_blocks, stack_pytrees)
 
 __all__ = ["AXIS", "EngineConfig", "SPMDEngine", "stack_epoch_batches"]
@@ -71,6 +73,14 @@ class EngineConfig:
     # objective of the FULL-GRAPH phase-0 mode (the sampled path's loss is
     # the loss_fn the engine is constructed with): "ce" | "focal"
     fg_loss: str = "ce"
+    # historical-embedding halo cache (DESIGN.md §8): eval forwards
+    # aggregate against the last-received boundary embeddings and only pay
+    # the exchange on the halo_refresh_every cadence; halo_cv refreshes a
+    # rotating slot chunk on cached epochs (the VR-GCN control-variate
+    # delta) instead of going fully stale between refreshes
+    halo_cache: bool = False
+    halo_refresh_every: int = 1
+    halo_cv: bool = False
 
 
 def _resolve_mode(mode: str, num_parts: int) -> str:
@@ -192,7 +202,13 @@ class SPMDEngine:
         }
 
         meta = {"max_nodes": pg.max_nodes, "own_cap": pg.own_cap}
+        self._fwd_meta = meta
         if config.overlap_halo:
+            if config.halo_cache:
+                raise ValueError(
+                    "halo_cache and overlap_halo are alternative exchange "
+                    "optimisations: the cache removes the very exchange the "
+                    "overlap would hide — pick one")
             aggs = (make_pallas_split_agg(pg.own_cap, interpret=config.interpret)
                     if config.use_pallas_agg else make_ref_split_agg(pg.own_cap))
             self.fwd = make_overlap_forward(
@@ -201,8 +217,25 @@ class SPMDEngine:
         else:
             agg = (make_pallas_mean_agg(pg.max_nodes, interpret=config.interpret)
                    if config.use_pallas_agg else make_ref_mean_agg(pg.max_nodes))
+            self._mean_agg = agg
             self.fwd = make_distributed_forward(model, meta, axis_name=AXIS,
                                                 agg=agg)
+        self.halo_cache = bool(config.halo_cache)
+        self.last_halo_exchange_bytes = 0
+        if self.halo_cache:
+            self.max_send = pg.send_idx.shape[-1]
+            # real (unpadded) rows per send-slot index, for the refreshed-
+            # payload accounting; halo_slot_bytes(0, maxS) == the graph's
+            # halo_bytes_per_layer
+            self._halo_slot_counts = np.asarray(pg.send_mask).sum(axis=(0, 1))
+            self._halo_byte_per_slot = (pg.features.shape[-1]
+                                        * pg.features.dtype.itemsize)
+            self._halo_state = jax.tree.map(
+                lambda x: jnp.asarray(x, f),
+                build_stacked_halo_cache(pg, pg.features.shape[-1],
+                                         model.hidden_dim))
+            self._halo_age = 0
+            self._cached_fwds: dict = {}
         # full-graph phase-0: value_and_grad straight through self.fwd (the
         # halo-exchange forward whose aggregation op carries a custom VJP)
         self._fg_loss = make_fullgraph_loss_fn(self.fwd, loss=config.fg_loss)
@@ -239,6 +272,68 @@ class SPMDEngine:
         lab = jnp.where(mask, labels, -1)
         micro, _, _ = f1_scores_jnp(preds, lab, self.num_classes)
         return micro
+
+    # ------------------------------------------ historical halo cache state
+    # The cache ages once per distributed eval forward (standalone evaluate
+    # OR the fused async epoch's eval); the refresh slot range is a host-side
+    # constant from halo_refresh_plan, so each plan compiles its own
+    # executable and the pure-cached one contains no collective at all.
+
+    def _halo_plan(self) -> tuple[int, int]:
+        return halo_refresh_plan(self._halo_age, self.config.halo_refresh_every,
+                                 self.config.halo_cv, self.max_send)
+
+    def _halo_slot_bytes(self, lo: int, hi: int) -> int:
+        return int(self._halo_slot_counts[lo:hi].sum()) * self._halo_byte_per_slot
+
+    def _halo_tick(self, plan: tuple[int, int], new_state) -> None:
+        self._halo_state = new_state
+        # one exchange per SAGE layer, each shipping only the refreshed slots
+        self.last_halo_exchange_bytes = 2 * self._halo_slot_bytes(*plan)
+        self._halo_age += 1
+
+    def _cached_fwd(self, lo: int, hi: int):
+        key = (lo, hi)
+        if key not in self._cached_fwds:
+            self._cached_fwds[key] = make_cached_forward(
+                self.model, self._fwd_meta, axis_name=AXIS,
+                agg=self._mean_agg, refresh_lo=lo, refresh_hi=hi,
+                ring_chunks=self.config.ring_chunks)
+        return self._cached_fwds[key]
+
+    def _eval_stacked_cached(self, params, cache, split: str,
+                             per_partition_params: bool, plan):
+        fwd_c = self._cached_fwd(*plan)
+
+        def one(prm, shard, c, labels, mask):
+            logits, nc = fwd_c(prm, shard, c)
+            preds = jnp.argmax(logits, axis=-1)
+            return self._micro_of(preds, labels, mask), preds, nc
+
+        return jax.vmap(one, axis_name=AXIS,
+                        in_axes=(0 if per_partition_params else None,
+                                 0, 0, 0, 0))(
+            params, self.shards, cache, self.labels, self.masks[split])
+
+    def _eval_spmd_cached(self, params, cache, split: str,
+                          per_partition_params: bool, plan):
+        fwd_c = self._cached_fwd(*plan)
+
+        def shard_fn(prm, cache_s, shard_s, labels_s, mask_s):
+            p = jax.tree.map(lambda x: x[0], prm) if per_partition_params else prm
+            sh = jax.tree.map(lambda x: x[0], shard_s)
+            c = jax.tree.map(lambda x: x[0], cache_s)
+            logits, nc = fwd_c(p, sh, c)
+            preds = jnp.argmax(logits, axis=-1)
+            micro = self._micro_of(preds, labels_s[0], mask_s[0])
+            return micro[None], preds[None], jax.tree.map(lambda x: x[None], nc)
+
+        fn = shard_map_compat(
+            shard_fn, self._mesh,
+            in_specs=(P(AXIS) if per_partition_params else P(),
+                      P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+            out_specs=(P(AXIS), P(AXIS), P(AXIS)))
+        return fn(params, cache, self.shards, self.labels, self.masks[split])
 
     # ------------------------------------------------- stacked (vmap) mode
     def _eval_stacked(self, params, split: str, per_partition_params: bool):
@@ -316,7 +411,7 @@ class SPMDEngine:
         return fn(params, opt_state, self.shards, self.labels,
                   self.masks["train"])
 
-    def _phase0_async_partition_program(self):
+    def _phase0_async_partition_program(self, plan=None):
         """ONE partition's fused generalization epoch: epoch draw (uniform
         shuffle, or the CBS-weighted Eq. 3 mini-epoch when the sampler is
         class-balanced), per-iteration batch materialisation, the train scan
@@ -332,9 +427,10 @@ class SPMDEngine:
         """
         ds = self._device_sampler
         num_parts = self.num_parts
+        fwd_c = self._cached_fwd(*plan) if plan is not None else None
 
         def per_part(params, opt_state, key, logp_row, train_row, k_row,
-                     shard, labels, val_mask):
+                     shard, labels, val_mask, *cache):
             kd, ke = jax.random.split(key)
             nodes, valid = ds.draw_epoch(kd, logp_row, train_row, k_row)
             iter_keys = jax.random.split(ke, ds.num_batches)
@@ -355,45 +451,66 @@ class SPMDEngine:
             # fused eval: the validation forward (halo exchange + blocked
             # aggregation + on-device F1) on the epoch's final params, in
             # the SAME device program as the train scan
+            if fwd_c is not None:
+                logits, new_cache = fwd_c(params, shard, cache[0])
+                preds = jnp.argmax(logits, axis=-1)
+                micro = self._micro_of(preds, labels, val_mask)
+                return params, opt_state, losses, micro, new_cache
             preds = jnp.argmax(self.fwd(params, shard), axis=-1)
             micro = self._micro_of(preds, labels, val_mask)
             return params, opt_state, losses, micro
 
         return per_part
 
-    def _phase0_async_stacked(self, params, opt_state, keys):
+    def _phase0_async_stacked(self, params, opt_state, keys, cache=None,
+                              plan=None):
         ds = self._device_sampler
-        per_part = self._phase0_async_partition_program()
-        params, opt_state, losses, micro = jax.vmap(
+        per_part = self._phase0_async_partition_program(plan)
+        extra_args = (cache,) if cache is not None else ()
+        extra_axes = (0,) * len(extra_args)
+        out = jax.vmap(
             per_part, axis_name=AXIS,
-            in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0))(
+            in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0) + extra_axes)(
                 params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
-                self.shards, self.labels, self.masks["val"])
+                self.shards, self.labels, self.masks["val"], *extra_args)
+        params, opt_state, losses, micro = out[:4]
         # every partition applies the identical mean update to the identical
         # replica: return one copy (bitwise equal across the stacked axis)
-        return (jax.tree.map(lambda x: x[0], params),
+        head = (jax.tree.map(lambda x: x[0], params),
                 jax.tree.map(lambda x: x[0], opt_state),
                 losses.T, micro)                    # (I, P), (P,)
+        return head + tuple(out[4:])
 
-    def _phase0_async_spmd(self, params, opt_state, keys):
+    def _phase0_async_spmd(self, params, opt_state, keys, cache=None,
+                           plan=None):
         ds = self._device_sampler
+        cached = cache is not None
 
         def shard_fn(params, opt_state, key_s, logp_s, train_s, k_s,
-                     shard_s, labels_s, mask_s):
-            per_part = self._phase0_async_partition_program()
+                     shard_s, labels_s, mask_s, *cache_s):
+            per_part = self._phase0_async_partition_program(plan)
             sh = jax.tree.map(lambda x: x[0], shard_s)
-            params, opt_state, losses, micro = per_part(
+            extra = tuple(jax.tree.map(lambda x: x[0], c) for c in cache_s)
+            out = per_part(
                 params, opt_state, key_s[0], logp_s[0], train_s[0], k_s[0],
-                sh, labels_s[0], mask_s[0])
-            return params, opt_state, losses[:, None], micro[None]
+                sh, labels_s[0], mask_s[0], *extra)
+            params, opt_state, losses, micro = out[:4]
+            head = (params, opt_state, losses[:, None], micro[None])
+            return head + tuple(jax.tree.map(lambda x: x[None], c)
+                                for c in out[4:])
 
         fn = shard_map_compat(
             shard_fn, self._mesh,
             in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P(AXIS),
-                      P(AXIS), P(AXIS), P(AXIS)),
-            out_specs=(P(), P(), P(None, AXIS), P(AXIS)))
-        return fn(params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
-                  self.shards, self.labels, self.masks["val"])
+                      P(AXIS), P(AXIS), P(AXIS)) + ((P(AXIS),) if cached
+                                                    else ()),
+            out_specs=(P(), P(), P(None, AXIS), P(AXIS)) + ((P(AXIS),)
+                                                            if cached else ()))
+        args = (params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
+                self.shards, self.labels, self.masks["val"])
+        if cached:
+            args = args + (cache,)
+        return fn(*args)
 
     def _phase1_stacked(self, pparams, popt, batches, global_params, budgets):
         def one_iter(carry, xs):
@@ -589,12 +706,22 @@ class SPMDEngine:
         """
         if self._device_sampler is None:
             raise ValueError("phase0_epoch_async needs set_device_sampler()")
-        impl = (self._phase0_async_spmd if self.mode == "spmd"
+        base = (self._phase0_async_spmd if self.mode == "spmd"
                 else self._phase0_async_stacked)
-        fn = self._compiled(f"phase0_async-g{self._sampler_gen}", impl,
-                            params, opt_state, keys)
-        (params, opt_state, losses, val_micro), dt = self._timed(
-            fn, params, opt_state, keys)
+        if self.halo_cache:
+            plan = self._halo_plan()
+            impl = lambda p, o, k, c: base(p, o, k, c, plan)
+            fn = self._compiled(
+                f"phase0_async-g{self._sampler_gen}-c{plan[0]}-{plan[1]}",
+                impl, params, opt_state, keys, self._halo_state)
+            (params, opt_state, losses, val_micro, new_state), dt = \
+                self._timed(fn, params, opt_state, keys, self._halo_state)
+            self._halo_tick(plan, new_state)
+        else:
+            fn = self._compiled(f"phase0_async-g{self._sampler_gen}", base,
+                                params, opt_state, keys)
+            (params, opt_state, losses, val_micro), dt = self._timed(
+                fn, params, opt_state, keys)
         self.last_eval_seconds = 0.0    # eval is inside dt on this path
         return params, opt_state, losses, val_micro, dt
 
@@ -606,6 +733,11 @@ class SPMDEngine:
         ``use_pallas_agg=True``) and the cross-partition gradient mean.  The
         centralized (P=1) configuration is the paper's Table IV baseline at
         full-graph scale; P>1 is per-partition full-graph training."""
+        if self.halo_cache:
+            raise ValueError(
+                "halo_cache is an eval-forward optimisation; full-graph "
+                "training differentiates through the live halo exchange "
+                "and cannot train against stale cached embeddings")
         impl = (self._phase0_fullgraph_spmd if self.mode == "spmd"
                 else self._phase0_fullgraph_stacked)
         fn = self._compiled(f"phase0_fg-{iters}",
@@ -682,6 +814,24 @@ class SPMDEngine:
 
     def evaluate(self, params, split: str = "test",
                  per_partition_params: bool = True):
+        if self.halo_cache:
+            # the refresh slot range is a static host-side plan, so every
+            # plan gets its own executable (the pure-cached one has no
+            # collective at all); the cache rides through as carried state
+            plan = self._halo_plan()
+            if self.mode == "spmd":
+                impl = lambda prm, c: self._eval_spmd_cached(
+                    prm, c, split, per_partition_params, plan)
+            else:
+                impl = lambda prm, c: self._eval_stacked_cached(
+                    prm, c, split, per_partition_params, plan)
+            fn = self._compiled(
+                f"eval-{split}-{per_partition_params}-c{plan[0]}-{plan[1]}",
+                impl, params, self._halo_state)
+            (micro, preds, new_state), self.last_eval_seconds = self._timed(
+                fn, params, self._halo_state)
+            self._halo_tick(plan, new_state)
+            return micro, preds
         if self.mode == "spmd":
             impl = lambda prm: self._eval_spmd(prm, split, per_partition_params)
         else:

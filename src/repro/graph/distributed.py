@@ -44,7 +44,8 @@ from .csr import CSRGraph
 from .sage import GraphSAGE, SAGEParams
 
 __all__ = ["PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
-           "make_overlap_forward", "make_ref_mean_agg", "make_pallas_mean_agg",
+           "make_overlap_forward", "make_cached_forward", "halo_refresh_plan",
+           "make_ref_mean_agg", "make_pallas_mean_agg",
            "make_ref_split_agg", "make_pallas_split_agg"]
 
 
@@ -94,6 +95,16 @@ class PartitionedGraph:
     def halo_bytes_per_layer(self) -> int:
         d = self.features.shape[-1]
         return int(self.n_halo.sum()) * d * self.features.dtype.itemsize
+
+    def halo_slot_bytes(self, lo: int, hi: int) -> int:
+        """Real (unpadded) payload of exchanging send slots ``[lo, hi)`` of
+        every partition pair, per layer — the refreshed-row bytes a cached
+        forward puts on the wire.  ``halo_slot_bytes(0, maxS)`` equals
+        :attr:`halo_bytes_per_layer` (every real slot lives in some pair's
+        slot range, and Σ_q n_halo[q] counts each exactly once)."""
+        d = self.features.shape[-1]
+        real = int(self.send_mask[:, :, lo:hi].sum())
+        return real * d * self.features.dtype.itemsize
 
     @property
     def padded_wire_bytes_per_exchange(self) -> int:
@@ -327,6 +338,37 @@ def _halo_exchange(h, send_idx, send_mask, recv_pos, axis_name: str,
     return h.at[flat_pos].set(flat_val.astype(h.dtype))
 
 
+def halo_refresh_plan(age: int, refresh_every: int, cv: bool,
+                      max_send: int) -> tuple[int, int]:
+    """Static send-slot range ``[lo, hi)`` the next cached forward refreshes.
+
+    ``age`` counts distributed eval forwards since the cache was created
+    (host-side, so the choice is a Python constant baked into the trace —
+    the cached-epoch executable contains NO collective at all).
+
+      age % K == 0        full refresh: (0, max_send) — bit-for-bit the
+                          synchronous exchange, which is what makes the
+                          staleness-0 (K == 1) path bitwise-identical to
+                          :func:`make_distributed_forward`.
+      otherwise, cv off   (0, 0): aggregate purely against the cache.
+      otherwise, cv on    the VR-GCN-style partial refresh: the slot space
+                          is cut into K-1 contiguous chunks and cached
+                          epoch c refreshes chunk c, so every halo row is
+                          re-exchanged within K epochs (staleness bound)
+                          and each cached epoch pays ~1/(K-1) of the full
+                          payload — the "cached h plus the delta of the
+                          refreshed rows" estimator.
+    """
+    K = max(1, int(refresh_every))
+    if K == 1 or age % K == 0:
+        return 0, max_send
+    if not cv:
+        return 0, 0
+    c = (age % K) - 1
+    nc = K - 1
+    return (c * max_send) // nc, ((c + 1) * max_send) // nc
+
+
 # ---------------------------------------------------------------------------
 # aggregation backends
 # ---------------------------------------------------------------------------
@@ -456,6 +498,69 @@ def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
         logits = (h1 @ params.layer2.w_self + agg1 @ params.layer2.w_neigh
                   + params.layer2.b)
         return logits
+
+    return fwd
+
+
+def make_cached_forward(model: GraphSAGE, pg_meta: dict,
+                        axis_name: str = "data", agg=None,
+                        refresh_lo: int = 0, refresh_hi: int | None = None,
+                        ring_chunks: int = 0):
+    """Build the per-shard 2-layer forward against a HISTORICAL halo cache.
+
+    Returns ``fwd(params, shard, cache) -> (logits, new_cache)`` where
+    ``cache`` holds each layer's last-received exchange buffers in recv
+    layout: ``{"h0": (P, maxS, D), "h1": (P, maxS, H)}`` per partition
+    (``cache["hl"][q]`` = the rows partition q last sent here for layer l).
+    Pad slots are zero at init and the refresh writes sender-masked zeros
+    into them, so landing the cache never dirties the trash row.
+
+    ``[refresh_lo, refresh_hi)`` is the STATIC send-slot range this call
+    re-exchanges (from :func:`halo_refresh_plan`); everything outside it
+    aggregates against the cached rows:
+
+      full range    skip the cache landing entirely — gather/exchange/
+                    scatter is then exactly :func:`_halo_exchange`, so a
+                    refresh step is bit-for-bit the synchronous forward
+                    while ALSO snapshotting the recv buffers into the cache.
+      empty range   land cached rows only; the trace contains no collective.
+      partial       land the cache, then exchange just the slot slice and
+                    overwrite those rows fresh (the control-variate delta).
+
+    Cached halo rows enter aggregation as constants (no VJP through past
+    epochs), which is the VR-GCN historical-activation semantics.
+    """
+    max_nodes = pg_meta["max_nodes"]
+    mean_agg = agg if agg is not None else make_ref_mean_agg(max_nodes)
+    lo = int(refresh_lo)
+
+    def land_and_refresh(h, shard, cached):
+        hi = shard["send_idx"].shape[-1] if refresh_hi is None else refresh_hi
+        full = lo == 0 and hi == shard["send_idx"].shape[-1]
+        if hi > lo:
+            sent = (h[shard["send_idx"][:, lo:hi]]
+                    * shard["send_mask"][:, lo:hi][..., None])
+        if not full:
+            h = h.at[shard["recv_pos"].reshape(-1)].set(
+                cached.reshape(-1, h.shape[-1]).astype(h.dtype))
+        if hi > lo:
+            recv = _exchange(sent, axis_name, ring_chunks)
+            h = h.at[shard["recv_pos"][:, lo:hi].reshape(-1)].set(
+                recv.reshape(-1, h.shape[-1]).astype(h.dtype))
+            cached = cached.at[:, lo:hi].set(recv.astype(cached.dtype))
+        return h, cached
+
+    def fwd(params: SAGEParams, shard: dict, cache: dict):
+        h = shard["features"]
+        h, c0 = land_and_refresh(h, shard, cache["h0"])
+        agg0 = mean_agg(h, shard)
+        h1 = jax.nn.relu(h @ params.layer1.w_self + agg0 @ params.layer1.w_neigh
+                         + params.layer1.b)
+        h1, c1 = land_and_refresh(h1, shard, cache["h1"])
+        agg1 = mean_agg(h1, shard)
+        logits = (h1 @ params.layer2.w_self + agg1 @ params.layer2.w_neigh
+                  + params.layer2.b)
+        return logits, {"h0": c0, "h1": c1}
 
     return fwd
 

@@ -66,6 +66,9 @@ def run_gnn(args) -> dict:
         phase0_fraction=args.phase0_frac,
         full_graph_train=args.full_graph_train,
         full_graph_iters=args.full_graph_iters,
+        halo_cache=args.halo_cache,
+        halo_refresh_every=args.halo_refresh_every,
+        halo_cv=args.halo_cv,
     )
     result = run_eat_distgnn(cfg, verbose=True)
     print(json.dumps(result.summary(), indent=2))
@@ -184,6 +187,20 @@ def main() -> int:
                    help="exchange as a ppermute ring with N chunks per "
                         "step instead of one all_to_all (0 = all_to_all); "
                         "only meaningful with --overlap-halo")
+    g.add_argument("--halo-cache", action="store_true",
+                   help="historical-embedding halo cache: eval forwards "
+                        "aggregate against the last-received boundary "
+                        "embeddings and only pay the exchange on the "
+                        "--halo-refresh-every cadence (DESIGN.md §8)")
+    g.add_argument("--halo-refresh-every", type=int, default=4,
+                   help="full halo refresh cadence K with --halo-cache: "
+                        "every K-th eval forward pays the full exchange "
+                        "(1 = refresh always, i.e. no staleness)")
+    g.add_argument("--halo-cv", action="store_true",
+                   help="VR-GCN control-variate mode: cached forwards "
+                        "refresh a rotating 1/(K-1) chunk of the send "
+                        "slots instead of going fully stale between "
+                        "full refreshes")
     g.add_argument("--no-interpret", action="store_true",
                    help="run Pallas kernels compiled (real TPU) instead of "
                         "interpret mode; pair with --engine spmd on a mesh")

@@ -110,6 +110,13 @@ class EATConfig:
     # with interior aggregation + the self-term matmul (DESIGN.md §5)
     overlap_halo: bool = False
     ring_chunks: int = 0                  # chunked ppermute ring (0 = all_to_all)
+    # historical-embedding halo cache (DESIGN.md §8): eval forwards aggregate
+    # against the last-received boundary embeddings; only every
+    # halo_refresh_every-th forward pays the full exchange, and halo_cv
+    # refreshes a rotating slot chunk in between (VR-GCN control variate)
+    halo_cache: bool = False
+    halo_refresh_every: int = 4
+    halo_cv: bool = False
     interpret: bool = True                # Pallas interpret mode (False on TPU)
     # phase-0 trains FULL-GRAPH instead of sampled minibatches: one (or
     # ``full_graph_iters``) full-batch value_and_grad step(s) per epoch
@@ -155,6 +162,11 @@ class EATResult:
     comm_halo_bytes_phase0: int = 0
     comm_halo_bytes_phase1: int = 0
     halo_bytes_per_layer: int = 0      # eval-forward exchange payload/layer
+    # eval-forward exchange volume actually paid (sum and per-epoch trace):
+    # equals 2 * halo_bytes_per_layer per epoch without the cache, only the
+    # refreshed-row payload per epoch with --halo-cache
+    comm_halo_exchange_bytes: int = 0
+    halo_exchange_history: list[int] = field(default_factory=list)
     engine_mode: str = "stacked"
     phase1_time_s: float = 0.0         # slowest host's cumulative phase-1 time
     phase1_epochs: int = 0
@@ -197,6 +209,11 @@ class EATResult:
             "comm_halo_phase0_mb": round(self.comm_halo_bytes_phase0 / 1e6, 1),
             "comm_halo_phase1_mb": round(self.comm_halo_bytes_phase1 / 1e6, 1),
             "halo_bytes_per_layer": self.halo_bytes_per_layer,
+            "halo_cache": self.config.halo_cache,
+            "halo_refresh_every": self.config.halo_refresh_every,
+            "halo_cv": self.config.halo_cv,
+            "comm_halo_exchange_mb": round(
+                self.comm_halo_exchange_bytes / 1e6, 3),
             "phase1_time_s": round(self.phase1_time_s, 3),
             "phase1_epochs": self.phase1_epochs,
             "async_personalize": self.config.async_personalize,
@@ -282,6 +299,11 @@ class _EpochPrefetcher:
 
 
 def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
+    if cfg.halo_cache and cfg.full_graph_train:
+        raise ValueError(
+            "halo_cache is an eval-forward optimisation; full_graph_train "
+            "differentiates through the live halo exchange and cannot train "
+            "against stale cached embeddings")
     graph = make_benchmark(BENCHMARKS[cfg.dataset])
     n_parts = 1 if cfg.centralized else cfg.num_parts
 
@@ -315,7 +337,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                             interpret=cfg.interpret,
                             overlap_halo=cfg.overlap_halo,
                             ring_chunks=cfg.ring_chunks,
-                            fg_loss="focal" if cfg.use_focal else "ce"))
+                            fg_loss="focal" if cfg.use_focal else "ce",
+                            halo_cache=cfg.halo_cache,
+                            halo_refresh_every=cfg.halo_refresh_every,
+                            halo_cv=cfg.halo_cv))
     if verbose:
         print(f"engine[{engine.mode}] {pg.summary()}")
 
@@ -343,8 +368,14 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     eff_fraction = cfg.subset_fraction if cfg.use_cbs else 1.0
     fetch_bytes_per_epoch = int(cut_frac * graph.num_edges * graph.feature_dim
                                 * 4 * eff_fraction)
-    halo_bytes_per_epoch = (2 * pg.halo_bytes_per_layer   # one per SAGE layer
-                            + fetch_bytes_per_epoch)
+    def eval_exchange_bytes() -> int:
+        # the exchange volume THIS epoch's eval forward actually paid: only
+        # the refreshed-row payload under the historical halo cache (the
+        # engine reports it after each cached forward), the full per-layer
+        # exchange otherwise
+        if cfg.halo_cache:
+            return int(engine.last_halo_exchange_bytes)
+        return 2 * pg.halo_bytes_per_layer
 
     def make_batch(nodes: np.ndarray) -> dict:
         # fixed shapes (pad + mask) so batches stack across hosts and the
@@ -380,6 +411,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     comm_grad = 0
     comm_halo_p0 = 0
     comm_halo_p1 = 0
+    halo_exchange_hist: list[int] = []   # per-epoch eval-exchange payload
     best_global = params
     loss_hist: list[float] = []
     val_hist: list[float] = []
@@ -447,6 +479,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
             iters = np.asarray(losses).shape[0]
             t_host = np.zeros(n_parts)      # no host sampling on this path
             comm_halo_p0 += fg_halo_bytes_per_epoch
+            halo_exchange_hist.append(2 * pg.halo_bytes_per_layer)
         elif async_phase0:
             # one device program per epoch: draw + train scan + fused eval.
             # The only host→device payload is the per-partition PRNG keys.
@@ -457,7 +490,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
             iters = np.asarray(losses).shape[0]
             t_host = np.zeros(n_parts)      # no host sampling on this path
             host_to_device_p0 += np.asarray(keys).nbytes
-            comm_halo_p0 += halo_bytes_per_epoch
+            ex = eval_exchange_bytes()
+            halo_exchange_hist.append(ex)
+            comm_halo_p0 += ex + fetch_bytes_per_epoch
         else:
             batches, t_host, iters = next_epoch_batches()
             host_to_device_p0 += sum(
@@ -465,7 +500,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                 for l in jax.tree_util.tree_leaves(batches))
             params, opt_state, losses, val_micro, t_dev = engine.phase0_epoch(
                 params, opt_state, batches)
-            comm_halo_p0 += halo_bytes_per_epoch
+            ex = eval_exchange_bytes()
+            halo_exchange_hist.append(ex)
+            comm_halo_p0 += ex + fetch_bytes_per_epoch
         comm_grad += grad_bytes_per_sync * n_parts * iters
         p0_iter_hist.append(int(iters))
         host_time = epoch_host_times(t_host, t_dev)
@@ -550,7 +587,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                     jnp.asarray(budgets))
                 host_elapsed += np.where(
                     active_np, epoch_host_times(t_host, t_dev), 0.0)
-            comm_halo_p1 += halo_bytes_per_epoch
+            ex = eval_exchange_bytes()
+            halo_exchange_hist.append(ex)
+            comm_halo_p1 += ex + fetch_bytes_per_epoch
             scores = np.asarray(val_micro)
             is_best = ctrl.record_phase1(scores)
             phase1_epochs += 1
@@ -605,6 +644,8 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         comm_halo_bytes_phase0=comm_halo_p0,
         comm_halo_bytes_phase1=comm_halo_p1,
         halo_bytes_per_layer=pg.halo_bytes_per_layer,
+        comm_halo_exchange_bytes=sum(halo_exchange_hist),
+        halo_exchange_history=halo_exchange_hist,
         engine_mode=engine.mode,
         phase1_time_s=phase1_time, phase1_epochs=phase1_epochs,
         host_draws_phase1=host_draws_p1,

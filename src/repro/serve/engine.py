@@ -56,13 +56,20 @@ class ServeEngine:
                 tok = jax.random.categorical(sub, logits / temperature, axis=-1)
             else:
                 tok = jnp.argmax(logits, axis=-1)
-            tok = tok.astype(jnp.int32)[:, None]
-            out[:, t] = np.asarray(tok[:, 0])
+            tok_np = np.asarray(tok, dtype=np.int32)
             if eos_id is not None:
-                done |= out[:, t] == eos_id
+                # rows that already emitted EOS are finished: freeze every
+                # later position to eos_id instead of resampling over it
+                tok_np = np.where(done, eos_id, tok_np)
+            out[:, t] = tok_np
+            if eos_id is not None:
+                done |= tok_np == eos_id
                 if done.all():
                     out = out[:, : t + 1]
                     break
-            logits, caches = self._decode(self.params, tok, caches, cache_len)
-            cache_len = cache_len + 1
+            if t + 1 < max_new_tokens:   # the last token needs no decode
+                logits, caches = self._decode(
+                    self.params, jnp.asarray(tok_np)[:, None], caches,
+                    cache_len)
+                cache_len = cache_len + 1
         return out

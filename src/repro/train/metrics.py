@@ -37,15 +37,23 @@ class F1Report:
 def confusion_counts(
     preds: np.ndarray, labels: np.ndarray, num_classes: int
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """(tp, fp, fn) per class, ignoring labels < 0."""
+    """(tp, fp, fn) per class, ignoring labels < 0.
+
+    An out-of-range prediction (negative or >= num_classes) names no real
+    class: it counts as a miss (fn on the true class) but contributes fp to
+    NO class — the same rule f1_scores_jnp applies, so the two paths agree
+    on adversarial inputs (np.add.at would otherwise wrap negatives and
+    crash on >= num_classes).
+    """
     valid = labels >= 0
     preds, labels = preds[valid], labels[valid]
     tp = np.zeros(num_classes)
     fp = np.zeros(num_classes)
     fn = np.zeros(num_classes)
     hit = preds == labels
+    in_range = (preds >= 0) & (preds < num_classes)
     np.add.at(tp, labels[hit], 1.0)
-    np.add.at(fp, preds[~hit], 1.0)
+    np.add.at(fp, preds[~hit & in_range], 1.0)
     np.add.at(fn, labels[~hit], 1.0)
     return tp, fp, fn
 
@@ -73,9 +81,14 @@ def f1_scores_jnp(preds, labels, num_classes: int):
     safe_labels = jnp.maximum(labels, 0)
     hit = (preds == labels) & valid
     miss = (preds != labels) & valid
+    # out-of-range preds are fn-only misses, matching confusion_counts: the
+    # explicit in-range mask (not maximum/OOB-drop, which disagree between
+    # the two ends of the range) keeps the scatter index always valid
+    fp_ok = miss & (preds >= 0) & (preds < num_classes)
+    safe_preds = jnp.clip(preds, 0, num_classes - 1)
     tp = jnp.zeros(num_classes).at[safe_labels].add(hit.astype(jnp.float32))
     fn = jnp.zeros(num_classes).at[safe_labels].add(miss.astype(jnp.float32))
-    fp = jnp.zeros(num_classes).at[jnp.maximum(preds, 0)].add(miss.astype(jnp.float32))
+    fp = jnp.zeros(num_classes).at[safe_preds].add(fp_ok.astype(jnp.float32))
     denom = 2 * tp + fp + fn
     per_class = jnp.where(denom > 0, 2 * tp / jnp.maximum(denom, 1e-12), 0.0)
     support = tp + fn

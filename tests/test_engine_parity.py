@@ -28,6 +28,13 @@
    forward (halo-exchange VJP + the custom-VJP aggregation op) matches the
    sequential reference bit-for-bit in fp64, and the Pallas path stages the
    forward AND transpose kernels while matching the jnp path in f32.
+8. Historical halo cache: staleness 0 (refresh every eval) == the sync
+   forward bitwise (stacked AND real spmd mesh); cached mode == the
+   sequential stale-aggregation oracle AND an independent closed-form stale
+   oracle bitwise in fp64 (standalone evaluate AND the fused async epoch);
+   comm counters report only the refreshed-row payload (CV chunks partition
+   one full exchange); the pure-cached spmd program lowers with no
+   all_to_all at all.
 
 Flaky-surface hardening: ALL fast fp64 checks (1–3) share ONE subprocess
 per module (one interpreter + one set of XLA compilations), and every
@@ -261,6 +268,156 @@ def run_phase0_async_parity(eng, seq, g, host_train, model, opt, seed, dtype):
     return out
 
 
+def run_halo_cache_parity(pg, model, loss_fn, opt, seed, dtype):
+    '''Historical halo cache parity (the PR-6 tentpole):
+      1. staleness 0 (K=1): the cached engine == the sync forward bitwise
+         across a sequence of evals with changing params, every eval paying
+         the full exchange;
+      2. K=3, cv off/on: cached stacked engine == cached sequential oracle
+         bitwise across the eval sequence, with equal byte counters;
+      3. counters: full-refresh evals report 2*halo_bytes_per_layer, pure-
+         cached evals 0, and the CV chunk payloads sum to one full exchange
+         over a refresh cycle;
+      4. an INDEPENDENT closed-form stale oracle (cv off): at eval t the h1
+         halo rows must equal layer-1 outputs under the params of the last
+         full refresh r = (t // K) * K — derived with no incremental cache
+         state, so a shared off-by-one in engine + sequential cannot hide.'''
+    from repro.graph.distributed import make_ref_mean_agg
+
+    kw = dict(mode="stacked", use_pallas_agg=False, dtype=dtype)
+    mk = lambda **o: SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                                EngineConfig(**kw, **o))
+    mkseq = lambda **o: SequentialReference(model, loss_fn, opt, pg,
+                                            GPHyperParams(),
+                                            EngineConfig(**kw, **o))
+    base = jax.tree.map(lambda x: jnp.asarray(x, dtype), model.init(seed))
+    pseq = [jax.tree.map(lambda x: x * (1.0 + 0.05 * i), base)
+            for i in range(6)]
+    full = 2 * pg.halo_bytes_per_layer
+    out = {}
+
+    sync = mk()
+    k1 = mk(halo_cache=True, halo_refresh_every=1)
+    d = b = 0
+    for prm in pseq[:3]:
+        mS, prS = sync.evaluate(prm, "val", per_partition_params=False)
+        mC, prC = k1.evaluate(prm, "val", per_partition_params=False)
+        d = max(d, float(jnp.abs(mS - mC).max()),
+                float((np.asarray(prS) != np.asarray(prC)).sum()))
+        b += int(k1.last_halo_exchange_bytes != full)
+    out["staleness0"] = d
+    out["staleness0_bytes"] = float(b)
+
+    for tag, cv in (("plain", False), ("cv", True)):
+        eng = mk(halo_cache=True, halo_refresh_every=3, halo_cv=cv)
+        seq = mkseq(halo_cache=True, halo_refresh_every=3, halo_cv=cv)
+        d = b = 0
+        byte_seq = []
+        for prm in pseq:
+            mA, prA = eng.evaluate(prm, "val", per_partition_params=False)
+            mB, prB = seq.evaluate(prm, "val", per_partition_params=False)
+            d = max(d, float(jnp.abs(mA - mB).max()),
+                    float((np.asarray(prA) != np.asarray(prB)).sum()))
+            b += int(eng.last_halo_exchange_bytes
+                     != seq.last_halo_exchange_bytes)
+            byte_seq.append(eng.last_halo_exchange_bytes)
+        out[f"{tag}_vs_seq"] = d
+        out[f"{tag}_bytes_mismatch"] = float(b)
+        if cv:
+            out["cv_cycle"] = float(byte_seq[0] != full
+                                    or sum(byte_seq[1:3]) != full
+                                    or byte_seq[3] != full
+                                    or 0 in byte_seq[1:3])
+        else:
+            out["plain_cached_bytes"] = float(
+                byte_seq[0] != full or byte_seq[1] != 0
+                or byte_seq[2] != 0 or byte_seq[3] != full)
+
+    send_idx = jnp.asarray(pg.send_idx)
+    send_mask = jnp.asarray(pg.send_mask, dtype)
+    recv_pos = jnp.asarray(pg.recv_pos)
+    feats = jnp.asarray(pg.features, dtype)
+    agg = make_ref_mean_agg(pg.max_nodes)
+    shards = [{"edge_src": jnp.asarray(pg.edge_src[p]),
+               "edge_dst": jnp.asarray(pg.edge_dst[p]),
+               "edge_mask": jnp.asarray(pg.edge_mask[p], dtype)}
+              for p in range(P)]
+
+    def exchange(hs):
+        sent = [hs[p][send_idx[p]] * send_mask[p][..., None]
+                for p in range(P)]
+        res = []
+        for q in range(P):
+            recv = jnp.stack([sent[p][q] for p in range(P)])
+            res.append(hs[q].at[recv_pos[q].reshape(-1)].set(
+                recv.reshape(-1, hs[q].shape[-1])))
+        return res
+
+    def layer1(prm, hs):
+        return [jax.nn.relu(hs[p] @ prm.layer1.w_self
+                            + agg(hs[p], shards[p]) @ prm.layer1.w_neigh
+                            + prm.layer1.b) for p in range(P)]
+
+    # h0 never goes stale in VALUE: features are constant, so the cached
+    # feature-halo rows equal a live exchange and the whole staleness story
+    # lives in the h1 halo rows
+    hs = exchange([feats[p] for p in range(P)])
+    eng = mk(halo_cache=True, halo_refresh_every=3)
+    d = 0
+    for t, prm in enumerate(pseq):
+        _, prA = eng.evaluate(prm, "val", per_partition_params=False)
+        h1_cur = layer1(prm, hs)
+        h1_stale = layer1(pseq[(t // 3) * 3], hs)
+        sent = [h1_stale[p][send_idx[p]] * send_mask[p][..., None]
+                for p in range(P)]
+        preds = []
+        for q in range(P):
+            recv = jnp.stack([sent[p][q] for p in range(P)])
+            h1 = h1_cur[q].at[recv_pos[q].reshape(-1)].set(
+                recv.reshape(-1, h1_cur[q].shape[-1]))
+            logits = (h1 @ prm.layer2.w_self
+                      + agg(h1, shards[q]) @ prm.layer2.w_neigh
+                      + prm.layer2.b)
+            preds.append(jnp.argmax(logits, axis=-1))
+        d = max(d, float((np.asarray(prA)
+                          != np.asarray(jnp.stack(preds))).sum()))
+    out["closed_form"] = d
+    return out
+
+
+def run_halo_cache_async_parity(pg, g, host_train, model, loss_fn, opt,
+                                seed, dtype):
+    '''The cached fused async epoch (cache carried as state through the one
+    device program) == the sequential oracle, bitwise, across 3 epochs at
+    K=2 — exercising full-refresh AND pure-cached fused evals.'''
+    kw = dict(mode="stacked", use_pallas_agg=False, dtype=dtype,
+              halo_cache=True, halo_refresh_every=2)
+    eng = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                     EngineConfig(**kw))
+    seq = SequentialReference(model, loss_fn, opt, pg, GPHyperParams(),
+                              EngineConfig(**kw))
+    ds = build_device_epoch_sampler(g, host_train, P, batch_size=BATCH,
+                                    subset_fraction=1.0,
+                                    class_balanced=False, fanouts=(3, 3),
+                                    dtype=dtype)
+    eng.set_device_sampler(ds)
+    seq.set_device_sampler(ds)
+    params = jax.tree.map(lambda x: jnp.asarray(x, dtype), model.init(seed))
+    pA = pB = params
+    oA = oB = opt.init(params)
+    keys0 = jax.random.split(jax.random.PRNGKey(seed ^ 0x6E02), P)
+    d = b = 0
+    for e in range(3):
+        keys = jax.vmap(jax.random.fold_in, (0, None))(keys0, e)
+        pA, oA, lA, vA, _ = eng.phase0_epoch_async(pA, oA, keys)
+        pB, oB, lB, vB, _ = seq.phase0_epoch_async(pB, oB, keys)
+        d = max(d, tree_maxdiff(pA, pB),
+                float(np.abs(np.asarray(lA) - np.asarray(lB)).max()),
+                float(np.abs(np.asarray(vA) - np.asarray(vB)).max()))
+        b += int(eng.last_halo_exchange_bytes != seq.last_halo_exchange_bytes)
+    return {"async_cached": d, "async_cached_bytes": float(b)}
+
+
 def run_async_parity(eng, seq, g, host_train, model, opt, seed, dtype):
     '''Fully-on-device phase-1 (device CBS draw + fanout + gather inside the
     fused step) vs the sequential reference running the SAME PRNG programs.'''
@@ -320,6 +477,11 @@ engO = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(), cfgO)
 seqO = SequentialReference(model, loss_fn, opt, pg, GPHyperParams(), cfgO)
 out["fullgraph_overlap"] = run_fullgraph_parity(engO, seqO, model, opt, 0,
                                                 jnp.float64)
+out["halo_cache"] = run_halo_cache_parity(pg, model, loss_fn, opt, 0,
+                                          jnp.float64)
+out["halo_cache_async"] = run_halo_cache_async_parity(pg, g, host_train,
+                                                      model, loss_fn, opt, 0,
+                                                      jnp.float64)
 print("RESULTS", json.dumps(out))
 """
 )
@@ -370,6 +532,25 @@ def test_overlap_split_forward_parity_fp64(fp64_shared):
     ppermute ring == the all_to_all exchange bit-for-bit."""
     assert all(v == 0 for v in fp64_shared["overlap"].values()), \
         fp64_shared["overlap"]
+
+
+def test_halo_cache_parity_fp64(fp64_shared):
+    """Historical halo cache: staleness 0 (K=1) == the sync forward bitwise;
+    K=3 (cv off AND on) cached engine == cached sequential oracle bitwise
+    across a 6-eval sequence; == an independent closed-form stale oracle
+    (h1 halo rows recomputed from the last-refresh params, no incremental
+    cache state); comm counters report only the refreshed-row payload, with
+    CV chunks summing to one full exchange per cycle."""
+    assert all(v == 0 for v in fp64_shared["halo_cache"].values()), \
+        fp64_shared["halo_cache"]
+
+
+def test_halo_cache_async_parity_fp64(fp64_shared):
+    """The cached fused phase-0 async epoch (halo cache carried as state
+    through the one device program) == the sequential oracle bitwise across
+    3 epochs at K=2, including the byte counters."""
+    assert all(v == 0 for v in fp64_shared["halo_cache_async"].values()), \
+        fp64_shared["halo_cache_async"]
 
 
 def test_fullgraph_train_parity_fp64(fp64_shared):
@@ -485,6 +666,39 @@ assert eng.mode == "spmd", eng.mode
 seq = SequentialReference(model, loss_fn, opt, pg, GPHyperParams(), cfgS)
 d = run_phase0_async_parity(eng, seq, g, host_train, model, opt, 0,
                             jnp.float64)
+# staleness 0 on the REAL mesh: a K=1 cached spmd engine == the sync spmd
+# forward bitwise, and every eval pays the full exchange
+engC = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                  EngineConfig(mode="spmd", use_pallas_agg=False,
+                               dtype=jnp.float64, halo_cache=True,
+                               halo_refresh_every=1))
+base = jax.tree.map(lambda x: jnp.asarray(x, jnp.float64), model.init(0))
+dd = bb = 0
+for i in range(3):
+    prm = jax.tree.map(lambda x: x * (1.0 + 0.1 * i), base)
+    mS, prS = eng.evaluate(prm, "val", per_partition_params=False)
+    mC, prC = engC.evaluate(prm, "val", per_partition_params=False)
+    dd = max(dd, float(jnp.abs(mS - mC).max()),
+             float((np.asarray(prS) != np.asarray(prC)).sum()))
+    bb += int(engC.last_halo_exchange_bytes != 2 * pg.halo_bytes_per_layer)
+d["spmd_staleness0"] = dd
+d["spmd_staleness0_bytes"] = float(bb)
+# structural wire witness: the refresh plan is a host-side constant, so the
+# pure-cached spmd eval program must lower with NO all_to_all at all — the
+# wire win is structural, not just a zeroed counter.  (The stacked-vmap mode
+# cannot witness this: vmap resolves collectives to data movement at trace
+# time.)
+engD = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                  EngineConfig(mode="spmd", use_pallas_agg=False,
+                               dtype=jnp.float64, halo_cache=True,
+                               halo_refresh_every=4))
+hlo_full = jax.jit(lambda p, c: engD._eval_spmd_cached(
+    p, c, "val", False, (0, engD.max_send))).lower(
+    base, engD._halo_state).as_text()
+hlo_cached = jax.jit(lambda p, c: engD._eval_spmd_cached(
+    p, c, "val", False, (0, 0))).lower(base, engD._halo_state).as_text()
+d["hlo_collective_witness"] = float("all_to_all" not in hlo_full
+                                    or "all_to_all" in hlo_cached)
 print("RESULTS", json.dumps(d))
 """
 )
@@ -497,7 +711,8 @@ def test_phase0_async_spmd_parity_fp64():
     program's only collectives are pure data movement (the epoch has no
     pmean: the gradient all-reduce is an all_gather followed by the same
     deterministic local stack-sum the oracle performs, and the fused eval's
-    exchange is an all_to_all)."""
+    exchange is an all_to_all).  Also checks halo-cache staleness 0 on the
+    real mesh: a K=1 cached spmd engine == the sync spmd forward bitwise."""
     res = subprocess.run([sys.executable, "-c", SPMD_FP64_ASYNC_SCRIPT],
                          capture_output=True, text=True, timeout=1800,
                          env=SUBPROC_ENV)
@@ -695,3 +910,67 @@ def test_segment_agg_rows_ragged_range_sweep(split_kind, seed, mean):
     # rows outside [row_base, n) are exactly zero — the guarantee the
     # bitwise-safe per-row select in the overlapped forward relies on
     assert np.abs(got[:n_int]).max(initial=0.0) == 0.0
+
+
+# --------------------------------------------------------------------------
+# historical halo cache: in-process structural witnesses (f32)
+# --------------------------------------------------------------------------
+
+def _build_halo_engine(**halo_kw):
+    from repro.core import partition_graph, GPHyperParams
+    from repro.engine import EngineConfig, SPMDEngine
+    from repro.graph import (BENCHMARKS, GraphSAGE, build_partitioned_graph,
+                             make_benchmark)
+    from repro.train.optim import AdamW
+
+    g = make_benchmark(BENCHMARKS["tiny"])
+    r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                        method="ew", seed=0)
+    pg = build_partitioned_graph(g, r.parts, 4)
+    model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                      num_classes=g.num_classes)
+    eng = SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3), pg,
+                     GPHyperParams(),
+                     EngineConfig(mode="stacked", use_pallas_agg=False,
+                                  halo_cache=True, **halo_kw))
+    return pg, model, eng
+
+
+def test_halo_slot_bytes_full_range_matches_per_layer():
+    """halo_slot_bytes is the refreshed-payload meter: the full slot range
+    reproduces halo_bytes_per_layer, the empty range is free, and any chunk
+    split partitions the payload exactly (what the CV accounting relies on)."""
+    pg, _, _ = _build_halo_engine(halo_refresh_every=2)
+    max_s = pg.send_idx.shape[-1]
+    assert pg.halo_slot_bytes(0, max_s) == pg.halo_bytes_per_layer
+    assert pg.halo_slot_bytes(0, 0) == 0
+    mid = max_s // 2
+    assert (pg.halo_slot_bytes(0, mid) + pg.halo_slot_bytes(mid, max_s)
+            == pg.halo_bytes_per_layer)
+
+
+def test_halo_cache_rejects_incompatible_configs():
+    """overlap_halo hides the exchange the cache removes (pick one), and
+    full-graph training must differentiate through a LIVE exchange."""
+    from repro.core import partition_graph, GPHyperParams
+    from repro.engine import EngineConfig, SPMDEngine
+    from repro.graph import (BENCHMARKS, GraphSAGE, build_partitioned_graph,
+                             make_benchmark)
+    from repro.train.optim import AdamW
+
+    g = make_benchmark(BENCHMARKS["tiny"])
+    r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                        method="ew", seed=0)
+    pg = build_partitioned_graph(g, r.parts, 4)
+    model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                      num_classes=g.num_classes)
+    mk = lambda cfg: SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3),
+                                pg, GPHyperParams(), cfg)
+    with pytest.raises(ValueError, match="overlap"):
+        mk(EngineConfig(mode="stacked", use_pallas_agg=False,
+                        halo_cache=True, overlap_halo=True))
+    eng = mk(EngineConfig(mode="stacked", use_pallas_agg=False,
+                          halo_cache=True))
+    params = model.init(0)
+    with pytest.raises(ValueError, match="full-graph"):
+        eng.phase0_fullgraph_epoch(params, None, iters=1)

@@ -56,3 +56,47 @@ def test_partition_stats_cut_counts():
     assert s.edge_cut == 2
     assert s.entropies.tolist() == [0.0, 0.0]
     assert s.balance == 1.0
+
+
+def test_partition_stats_weighted_by_labelled_counts():
+    """Unlabelled mass must not skew the weighted aggregates: a partition
+    that is mostly unlabelled (papers-like) contributes by its LABELLED
+    count, so stats match a graph with the unlabelled nodes deleted."""
+    # partition 0: 4 labelled nodes (classes 0,1), 96 unlabelled
+    # partition 1: 40 labelled nodes (class 0 only), 0 unlabelled
+    labels = np.concatenate([
+        np.array([0, 0, 1, 1]), np.full(96, -1), np.zeros(40, dtype=int)])
+    parts = np.concatenate([np.zeros(100, dtype=int), np.ones(40, dtype=int)])
+    n = len(labels)
+    indptr = np.arange(n + 1)          # ring: node i -> (i+1) % n
+    indices = (np.arange(n) + 1) % n
+    s = partition_stats(indptr, indices, labels, parts, 2, num_classes=2)
+    assert s.sizes.tolist() == [100, 40]
+    assert s.labelled_sizes.tolist() == [4, 40]
+    assert s.entropies[0] == pytest.approx(np.log(2))
+    assert s.entropies[1] == 0.0
+    # total: 4 * log2 + 40 * 0 — NOT 100 * log2
+    assert s.total_entropy == pytest.approx(4 * np.log(2))
+    # variance weights: 4/44 and 40/44
+    mean_h = s.entropies.mean()
+    want_var = ((s.entropies - mean_h) ** 2 * np.array([4, 40]) / 44).sum()
+    assert s.entropy_variance == pytest.approx(want_var)
+    # dropping the unlabelled nodes entirely must give the same aggregates
+    keep = labels >= 0
+    lab2, parts2 = labels[keep], parts[keep]
+    m = len(lab2)
+    s2 = partition_stats(np.arange(m + 1), (np.arange(m) + 1) % m,
+                         lab2, parts2, 2, num_classes=2)
+    assert s2.total_entropy == pytest.approx(s.total_entropy)
+    assert s2.entropy_variance == pytest.approx(s.entropy_variance)
+
+
+def test_partition_stats_all_unlabelled_partition():
+    """A fully-unlabelled partition has zero weight, not its node count."""
+    labels = np.array([0, 1, -1, -1, -1])
+    parts = np.array([0, 0, 1, 1, 1])
+    indptr = np.arange(6)
+    indices = (np.arange(5) + 1) % 5
+    s = partition_stats(indptr, indices, labels, parts, 2, num_classes=2)
+    assert s.labelled_sizes.tolist() == [2, 0]
+    assert s.total_entropy == pytest.approx(2 * np.log(2))

@@ -119,3 +119,53 @@ def test_chunked_ce_grad_matches_dense():
     g1 = jax.grad(lambda w_: chunked_ce_loss(h, w_, labels, chunk=8))(w)
     g2 = jax.grad(lambda w_: cross_entropy_loss(h @ w_, labels))(w)
     np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_f1_out_of_range_preds_are_fn_only():
+    """An out-of-range prediction names no class: fn on the true class,
+    fp nowhere — and the numpy path must not crash or wrap indices."""
+    labels = np.array([0, 1, 1])
+    preds = np.array([-3, 2, 0])       # negative, == num_classes, valid-miss
+    tp_fp_fn = f1_scores(preds, labels, 2)
+    # class 0: tp=0 fp=1(from pred 0 on label 1) fn=1; class 1: tp=0 fp=0 fn=2
+    assert tp_fp_fn.per_class.tolist() == [0.0, 0.0]
+    micro, macro, weighted = f1_scores_jnp(jnp.asarray(preds),
+                                           jnp.asarray(labels), 2)
+    assert float(micro) == pytest.approx(tp_fp_fn.micro, abs=1e-6)
+    # a negative pred must NOT be counted as class 0: one real class-0 fp
+    # (the valid miss), not two
+    labels2 = np.array([1, 1])
+    preds2 = np.array([-1, 0])
+    m_np = f1_scores(preds2, labels2, 2)
+    m_j = f1_scores_jnp(jnp.asarray(preds2), jnp.asarray(labels2), 2)
+    assert float(m_j[0]) == pytest.approx(m_np.micro, abs=1e-6)
+
+
+@given(st.integers(1, 500))
+@settings(max_examples=25, deadline=None)
+def test_f1_jnp_matches_numpy_adversarial(seed):
+    """Parity sweep with adversarial preds: negatives, == num_classes,
+    beyond num_classes, mixed with unlabelled and all-invalid labels."""
+    rng = np.random.default_rng(seed)
+    n, k = 120, 5
+    labels = rng.integers(0, k, n)
+    labels[rng.random(n) < 0.3] = -1          # unlabelled mix
+    if seed % 5 == 0:
+        labels[:] = -1                        # all-invalid labels
+    preds = rng.integers(-2, k + 2, n)        # includes -2..-1 and k..k+1
+    r = f1_scores(preds, labels, k)
+    micro, macro, weighted = f1_scores_jnp(jnp.asarray(preds),
+                                           jnp.asarray(labels), k)
+    assert float(micro) == pytest.approx(r.micro, abs=1e-5)
+    assert float(macro) == pytest.approx(r.macro, abs=1e-5)
+    assert float(weighted) == pytest.approx(r.weighted, abs=1e-5)
+
+
+def test_f1_all_preds_out_of_range():
+    labels = np.array([0, 1, 2])
+    preds = np.array([3, 4, -1])
+    r = f1_scores(preds, labels, 3)
+    assert r.micro == 0.0 and r.macro == 0.0 and r.weighted == 0.0
+    micro, macro, weighted = f1_scores_jnp(jnp.asarray(preds),
+                                           jnp.asarray(labels), 3)
+    assert float(micro) == 0.0 and float(macro) == 0.0

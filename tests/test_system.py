@@ -127,3 +127,80 @@ def test_serve_engine_greedy():
     # greedy decoding is deterministic
     out2 = engine.generate(prompts, max_new_tokens=8)
     np.testing.assert_array_equal(out, out2)
+
+
+class _ScriptedModel:
+    """Stub whose decode emits a fixed per-row token script: logits put all
+    mass on script[:, cache_len + 1], so greedy decoding replays the script
+    exactly — the controllable harness for the EOS/done semantics."""
+
+    cfg = None
+
+    def __init__(self, script):
+        import jax.numpy as jnp
+
+        self.script = jnp.asarray(script, jnp.int32)   # (B, >= max_new)
+        self.vocab = int(np.asarray(script).max()) + 1
+
+    def prefill(self, params, batch, *, cache_size=None):
+        import jax
+        import jax.numpy as jnp
+
+        logits = jax.nn.one_hot(self.script[:, 0], self.vocab) * 10.0
+        return logits, {"t": jnp.zeros(())}, 0
+
+    def decode_step(self, params, token, caches, cache_len, *, rolling=False):
+        import jax
+
+        nxt = jax.lax.dynamic_index_in_dim(self.script, cache_len + 1,
+                                           axis=1, keepdims=False)
+        return jax.nn.one_hot(nxt, self.vocab) * 10.0, caches
+
+
+def test_serve_engine_freezes_rows_past_eos():
+    """Regression: rows that emitted EOS must stay frozen at eos_id for the
+    rest of the sequence, not keep sampling over it (per-row EOS at
+    different steps)."""
+    from repro.serve import ServeEngine
+
+    eos = 9
+    script = np.array([
+        [5, eos, 7, 6, 5, 4],     # EOS at t=1; script keeps emitting junk
+        [eos, 3, 4, 5, 6, 7],     # EOS at t=0
+        [1, 2, 3, 4, 5, 6],       # never finishes
+    ])
+    model = _ScriptedModel(script)
+    engine = ServeEngine(model, params=None, cache_size=8)
+    out = engine.generate({"tokens": np.zeros((3, 4), np.int32)},
+                          max_new_tokens=5, eos_id=eos)
+    np.testing.assert_array_equal(
+        out, [[5, eos, eos, eos, eos],
+              [eos, eos, eos, eos, eos],
+              [1, 2, 3, 4, 5]])
+
+
+def test_serve_engine_truncates_when_all_done():
+    from repro.serve import ServeEngine
+
+    eos = 9
+    script = np.array([[3, eos, 1, 1, 1], [eos, 2, 2, 2, 2]])
+    engine = ServeEngine(_ScriptedModel(script), params=None, cache_size=8)
+    out = engine.generate({"tokens": np.zeros((2, 4), np.int32)},
+                          max_new_tokens=5, eos_id=eos)
+    np.testing.assert_array_equal(out, [[3, eos], [eos, eos]])
+
+
+def test_serve_engine_skips_trailing_decode():
+    """The token of the final position needs no further decode: exactly
+    max_new_tokens - 1 decode calls when nothing finishes early."""
+    from repro.serve import ServeEngine
+
+    script = np.array([[1, 2, 3, 4, 5, 6]])
+    engine = ServeEngine(_ScriptedModel(script), params=None, cache_size=8)
+    calls = []
+    inner = engine._decode
+    engine._decode = lambda *a, **k: (calls.append(1), inner(*a, **k))[1]
+    out = engine.generate({"tokens": np.zeros((1, 4), np.int32)},
+                          max_new_tokens=4)
+    np.testing.assert_array_equal(out, [[1, 2, 3, 4]])
+    assert len(calls) == 3
