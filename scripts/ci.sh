@@ -15,6 +15,10 @@
 #                          halo-cache smoke only: staleness 0 bitwise vs the
 #                          sync eval forward + pure-cached evals ship zero
 #                          halo bytes
+#   scripts/ci.sh serve    serving smoke only: incremental dirty-set
+#                          recomputation after scripted updates must be
+#                          BITWISE a from-scratch forward over the rebuilt
+#                          graph (runs outside the 30 s gate)
 #   scripts/ci.sh timing   the timing quarantine lane only: wall-clock-
 #                          sensitive tests, one automatic retry, never part
 #                          of the 30 s runtime gate
@@ -147,8 +151,78 @@ if [ "$mode" = "halo-cache" ]; then
     exit 0
 fi
 
+# ---- serving smoke ---------------------------------------------------------
+# Third fail-fast witness: the partitioned serving engine (PR 7).  Scripted
+# feature updates + a cross-partition edge add (halo growth) + a removal,
+# flushed through the incremental dirty-set path, must reproduce a fresh
+# engine's export over the REBUILT graph bit-for-bit, and the served argmax
+# must equal evaluate()'s predictions.  Not a pytest test, so it sits
+# outside the 30 s runtime gate by construction; the fp64 two-round oracle
+# runs in the slow lane (tests/test_serve_gnn.py).
+serve_smoke() {
+    python - <<'PY'
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import partition_graph, GPHyperParams
+from repro.engine import EngineConfig, SPMDEngine
+from repro.graph import (BENCHMARKS, GraphSAGE, build_partitioned_graph,
+                         make_benchmark)
+from repro.serve import GNNServingEngine, apply_updates_to_graph
+from repro.train.optim import AdamW
+
+g = make_benchmark(BENCHMARKS["tiny"])
+P = 4
+r = partition_graph(g.indptr, g.indices, g.features, g.labels, P,
+                    method="ew", seed=0)
+pg = build_partitioned_graph(g, r.parts, P)
+model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                  num_classes=g.num_classes)
+cfg = EngineConfig(mode="stacked", use_pallas_agg=False)
+eng = SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3), pg,
+                 GPHyperParams(), cfg)
+prm = model.init(0)
+srv = GNNServingEngine.from_engine(eng, pg, prm)
+
+rng = np.random.default_rng(0)
+fupd = {int(v): rng.normal(0, 1, g.feature_dim).astype(np.float32)
+        for v in rng.choice(g.num_nodes, 3, replace=False)}
+v = next(x for x in range(g.num_nodes) if len(g.neighbors(x)) > 1)
+u = next(x for x in range(g.num_nodes)
+         if x != v and r.parts[x] != r.parts[v] and x not in g.neighbors(v))
+adds, rems = [(u, v)], [(int(g.neighbors(v)[0]), v)]
+for gid, vec in fupd.items():
+    srv.update_features(gid, vec)
+assert srv.add_edge(*adds[0]) and srv.remove_edge(*rems[0])
+st = srv.flush()
+
+g2 = apply_updates_to_graph(g, fupd, adds, rems)
+pg2 = build_partitioned_graph(g2, r.parts, P)
+eng2 = SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3), pg2,
+                  GPHyperParams(), cfg)
+fresh = eng2.export_serving_state(prm)
+want = np.zeros((g.num_nodes, model.num_classes), np.float32)
+for p in range(P):
+    n = int(pg2.n_own[p])
+    want[np.asarray(pg2.global_ids[p])[:n]] = np.asarray(fresh["logits"][p])[:n]
+got = srv.export_logits()
+assert (got == want).all(), f"not bitwise: {np.abs(got - want).max()}"
+_, preds = eng2.evaluate(prm, "val", per_partition_params=False)
+for p in range(P):
+    n = int(pg2.n_own[p])
+    own = np.asarray(pg2.global_ids[p])[:n]
+    assert (got[own].argmax(-1) == np.asarray(preds)[p][:n]).all()
+print(f"serve smoke OK ({st['rows_recomputed']} rows recomputed "
+      "incrementally, bitwise vs fresh forward)")
+PY
+}
+
+if [ "$mode" = "serve" ]; then
+    serve_smoke || exit 1
+    exit 0
+fi
+
 grad_smoke || { echo "REGRESSION: grad-parity smoke failed"; exit 1; }
 halo_cache_smoke || { echo "REGRESSION: halo-cache smoke failed"; exit 1; }
+serve_smoke || { echo "REGRESSION: serving smoke failed"; exit 1; }
 
 out=$(python -m pytest -m "not slow and not timing" -q --durations=0 2>&1)
 pytest_status=$?

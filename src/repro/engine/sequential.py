@@ -95,11 +95,9 @@ class SequentialReference:
             # rendering of the engine's stacked (P, P, maxS, D) cache state
             Pn = pg.num_parts
             self._halo_state = {
-                "h0": [jnp.zeros((Pn, self.max_send, pg.features.shape[-1]),
-                                 f) for _ in range(Pn)],
-                "h1": [jnp.zeros((Pn, self.max_send, model.hidden_dim), f)
-                       for _ in range(Pn)],
-            }
+                f"h{i}": [jnp.zeros((Pn, self.max_send, d), f)
+                          for _ in range(Pn)]
+                for i, d in enumerate(model.layer_input_dims)}
             self._halo_age = 0
         self._grad_step = jax.jit(jax.value_and_grad(loss_fn))
         self._pstep1 = jax.jit(make_personalize_partition_step(
@@ -181,25 +179,24 @@ class SequentialReference:
         lo, hi = halo_refresh_plan(self._halo_age, self.halo_refresh_every,
                                    self.halo_cv, self.max_send)
         hs = [self.features[p] for p in range(P)]
-        hs = self._exchange_cached(hs, "h0", lo, hi)
-        h1 = []
-        for p in range(P):
-            lp = params_list[p].layer1
-            agg = self._agg(hs[p], self._edge_shards[p])
-            h1.append(jax.nn.relu(hs[p] @ lp.w_self + agg @ lp.w_neigh + lp.b))
-        h1 = self._exchange_cached(h1, "h1", lo, hi)
-        logits = []
-        for p in range(P):
-            lp = params_list[p].layer2
-            agg = self._agg(h1[p], self._edge_shards[p])
-            logits.append(h1[p] @ lp.w_self + agg @ lp.w_neigh + lp.b)
+        num_layers = len(params_list[0].layers)
+        for i in range(num_layers):
+            hs = self._exchange_cached(hs, f"h{i}", lo, hi)
+            nxt = []
+            for p in range(P):
+                lp = params_list[p].layers[i]
+                agg = self._agg(hs[p], self._edge_shards[p])
+                out = hs[p] @ lp.w_self + agg @ lp.w_neigh + lp.b
+                nxt.append(jax.nn.relu(out) if i < num_layers - 1 else out)
+            hs = nxt
         real = int(self._halo_slot_counts[lo:hi].sum())
-        self.last_halo_exchange_bytes = 2 * real * self._halo_byte_per_slot
+        self.last_halo_exchange_bytes = (num_layers * real
+                                         * self._halo_byte_per_slot)
         self._halo_age += 1
-        return logits
+        return hs
 
     def _full_forward(self, params_list: list) -> list:
-        """Layer-synchronous 2-layer GraphSAGE over all partitions — the same
+        """Layer-synchronous n-layer GraphSAGE over all partitions — the same
         schedule the per-shard fwd runs, unrolled in Python."""
         if self.overlap:
             return self._full_forward_overlap(params_list)
@@ -207,19 +204,17 @@ class SequentialReference:
             return self._full_forward_cached(params_list)
         P = self.num_parts
         hs = [self.features[p] for p in range(P)]
-        hs = self._exchange(hs)
-        h1 = []
-        for p in range(P):
-            lp = params_list[p].layer1
-            agg = self._agg(hs[p], self._edge_shards[p])
-            h1.append(jax.nn.relu(hs[p] @ lp.w_self + agg @ lp.w_neigh + lp.b))
-        h1 = self._exchange(h1)
-        logits = []
-        for p in range(P):
-            lp = params_list[p].layer2
-            agg = self._agg(h1[p], self._edge_shards[p])
-            logits.append(h1[p] @ lp.w_self + agg @ lp.w_neigh + lp.b)
-        return logits
+        num_layers = len(params_list[0].layers)
+        for i in range(num_layers):
+            hs = self._exchange(hs)
+            nxt = []
+            for p in range(P):
+                lp = params_list[p].layers[i]
+                agg = self._agg(hs[p], self._edge_shards[p])
+                out = hs[p] @ lp.w_self + agg @ lp.w_neigh + lp.b
+                nxt.append(jax.nn.relu(out) if i < num_layers - 1 else out)
+            hs = nxt
+        return hs
 
     def _split_layer(self, hs: list, layers: list, activate: bool) -> list:
         """One boundary/interior split layer, unrolled in Python — the
@@ -247,9 +242,11 @@ class SequentialReference:
     def _full_forward_overlap(self, params_list: list) -> list:
         P = self.num_parts
         hs = [self.features[p] for p in range(P)]
-        h1 = self._split_layer(hs, [p.layer1 for p in params_list], True)
-        logits = self._split_layer(h1, [p.layer2 for p in params_list], False)
-        return logits
+        num_layers = len(params_list[0].layers)
+        for i in range(num_layers):
+            hs = self._split_layer(hs, [p.layers[i] for p in params_list],
+                                   i < num_layers - 1)
+        return hs
 
     def _eval(self, params_list: list, split: str):
         import time

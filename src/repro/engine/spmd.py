@@ -42,6 +42,7 @@ from ..core.gp.trainer import (GPHyperParams, make_fullgraph_loss_fn,
                                make_personalize_step)
 from ..graph.distributed import (PartitionedGraph, halo_refresh_plan,
                                  make_cached_forward, make_distributed_forward,
+                                 make_export_forward,
                                  make_overlap_forward, make_pallas_mean_agg,
                                  make_pallas_split_agg, make_ref_mean_agg,
                                  make_ref_split_agg)
@@ -232,8 +233,7 @@ class SPMDEngine:
                                         * pg.features.dtype.itemsize)
             self._halo_state = jax.tree.map(
                 lambda x: jnp.asarray(x, f),
-                build_stacked_halo_cache(pg, pg.features.shape[-1],
-                                         model.hidden_dim))
+                build_stacked_halo_cache(pg, model.layer_input_dims))
             self._halo_age = 0
             self._cached_fwds: dict = {}
         # full-graph phase-0: value_and_grad straight through self.fwd (the
@@ -249,22 +249,29 @@ class SPMDEngine:
             from ..launch.mesh import make_partition_mesh
             self._mesh = make_partition_mesh(self.num_parts, AXIS)
         self._cache: dict = {}
+        self.compile_count = 0
 
     # ------------------------------------------------------------ plumbing
     def _shape_key(self, name: str, args) -> tuple:
         # shardings are part of the key: an AOT executable is specialised to
         # its input shardings, and epoch 2's params arrive sharded over the
-        # mesh while epoch 1's broadcast-fresh params were replicated
+        # mesh while epoch 1's broadcast-fresh params were replicated.
+        # weak_type too: jit specialises on it, and a python-scalar-built
+        # array would otherwise collide with a strongly-typed one
         leaves = jax.tree_util.tree_leaves(args)
         return (name,) + tuple(
-            (l.shape, str(l.dtype), str(getattr(l, "sharding", "")))
+            (l.shape, str(l.dtype), bool(getattr(l, "weak_type", False)),
+             str(getattr(l, "sharding", "")))
             for l in leaves)
 
     def _compiled(self, name: str, fn: Callable, *args):
         """AOT lower+compile once per input-shape signature, so epoch timing
-        in the pipeline never includes XLA compilation."""
+        in the pipeline never includes XLA compilation.  ``compile_count``
+        exposes the misses: identically shaped/sharded fresh inputs must
+        reuse the executable (locked by a tier-1 regression test)."""
         key = self._shape_key(name, args)
         if key not in self._cache:
+            self.compile_count += 1
             self._cache[key] = jax.jit(fn).lower(*args).compile()
         return self._cache[key]
 
@@ -289,7 +296,8 @@ class SPMDEngine:
     def _halo_tick(self, plan: tuple[int, int], new_state) -> None:
         self._halo_state = new_state
         # one exchange per SAGE layer, each shipping only the refreshed slots
-        self.last_halo_exchange_bytes = 2 * self._halo_slot_bytes(*plan)
+        self.last_halo_exchange_bytes = (self.model.num_layers
+                                         * self._halo_slot_bytes(*plan))
         self._halo_age += 1
 
     def _cached_fwd(self, lo: int, hi: int):
@@ -842,3 +850,44 @@ class SPMDEngine:
         # call, against the fused async epoch whose timing includes eval
         out, self.last_eval_seconds = self._timed(fn, params)
         return out
+
+    def export_serving_state(self, params) -> dict:
+        """One full-refresh forward materializing the serving handoff
+        (DESIGN.md §9): ``{"layers": [(P, maxN, D_i) per layer],
+        "logits": (P, maxN, C), "cache": {"h{i}": (P, P, maxS, D_i)}}``
+        as host numpy arrays.  The logits are bit-for-bit ``evaluate()``'s
+        forward (same spelling), the cache is the recv-layout snapshot a
+        full-refresh cached forward would have written — when the engine
+        runs with ``halo_cache`` the freshly exchanged buffers are handed
+        back to it, so the export doubles as a cache refresh.
+
+        Global (replicated) params only; the overlap forward never
+        materializes post-exchange layer inputs, so build the engine
+        without ``overlap_halo`` to serve from it.
+        """
+        if self.config.overlap_halo:
+            raise ValueError(
+                "export_serving_state needs the combined-edge forward; "
+                "build the engine without overlap_halo")
+        fwd_e = make_export_forward(self.model, self._fwd_meta,
+                                    axis_name=AXIS, agg=self._mean_agg)
+        if self.mode == "spmd":
+            def shard_fn(prm, shard_s):
+                sh = jax.tree.map(lambda x: x[0], shard_s)
+                return jax.tree.map(lambda x: x[None], fwd_e(prm, sh))
+            L = self.model.num_layers
+            out_specs = {"layers": tuple(P(AXIS) for _ in range(L)),
+                         "logits": P(AXIS),
+                         "cache": {f"h{i}": P(AXIS) for i in range(L)}}
+            impl = shard_map_compat(shard_fn, self._mesh,
+                                    in_specs=(P(), P(AXIS)),
+                                    out_specs=out_specs)
+        else:
+            impl = jax.vmap(fwd_e, axis_name=AXIS, in_axes=(None, 0))
+        fn = self._compiled("export_serving", impl, params, self.shards)
+        out = fn(params, self.shards)
+        if self.halo_cache:
+            # the snapshot is exactly a full refresh: hand it to the cache
+            self._halo_state = jax.tree.map(
+                lambda x: x.astype(self.config.dtype), out["cache"])
+        return jax.tree.map(np.asarray, out)

@@ -24,26 +24,24 @@ __all__ = ["StackedBlocks", "build_stacked_vjp_blocks",
            "stack_pytrees"]
 
 
-def build_stacked_halo_cache(pg: PartitionedGraph, feature_dim: int,
-                             hidden_dim: int) -> dict:
+def build_stacked_halo_cache(pg: PartitionedGraph,
+                             layer_dims: tuple[int, ...]) -> dict:
     """Zero-initialised historical-embedding halo cache, stacked ``(P, ...)``
     for the fused epoch programs (one leading axis per partition, carried
     through the cached eval as state).
 
     Per partition the cache keeps each layer's last-received exchange
-    buffers in recv layout ``(P, maxS, D_layer)`` — layer 1 receives raw
-    features (``feature_dim``), layer 2 receives hidden embeddings
-    (``hidden_dim``).  All-zero is the correct empty state: pad slots must
-    stay zero forever (trash-row hygiene), and :func:`halo_refresh_plan`
-    always schedules a FULL refresh at age 0, so no real cached row is ever
-    read before it has been received once.
+    buffers in recv layout ``(P, maxS, D_layer)``; ``layer_dims`` is the
+    width each layer's exchange ships (``model.layer_input_dims``: raw
+    features first, then hidden embeddings).  All-zero is the correct empty
+    state: pad slots must stay zero forever (trash-row hygiene), and
+    :func:`halo_refresh_plan` always schedules a FULL refresh at age 0, so
+    no real cached row is ever read before it has been received once.
     """
     P = pg.num_parts
     max_s = pg.send_idx.shape[-1]
-    return {
-        "h0": np.zeros((P, P, max_s, feature_dim), dtype=np.float32),
-        "h1": np.zeros((P, P, max_s, hidden_dim), dtype=np.float32),
-    }
+    return {f"h{i}": np.zeros((P, P, max_s, d), dtype=np.float32)
+            for i, d in enumerate(layer_dims)}
 
 
 @dataclass(frozen=True)

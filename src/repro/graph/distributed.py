@@ -44,7 +44,8 @@ from .csr import CSRGraph
 from .sage import GraphSAGE, SAGEParams
 
 __all__ = ["PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
-           "make_overlap_forward", "make_cached_forward", "halo_refresh_plan",
+           "make_overlap_forward", "make_cached_forward", "make_export_forward",
+           "halo_refresh_plan", "RecomputePlanner",
            "make_ref_mean_agg", "make_pallas_mean_agg",
            "make_ref_split_agg", "make_pallas_split_agg"]
 
@@ -466,7 +467,7 @@ def make_pallas_split_agg(own_cap: int, *, interpret: bool = True):
 
 def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
                              axis_name: str = "data", agg=None):
-    """Build the per-shard 2-layer SYNCHRONOUS forward with halo exchange.
+    """Build the per-shard n-layer SYNCHRONOUS forward with halo exchange.
 
     Returns ``fwd(params, shard) -> logits`` where ``shard`` is the
     per-partition slice of the stacked PartitionedGraph arrays; call it
@@ -487,17 +488,15 @@ def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
 
     def fwd(params: SAGEParams, shard: dict) -> jnp.ndarray:
         h = shard["features"]
-        h = _halo_exchange(h, shard["send_idx"], shard["send_mask"],
-                           shard["recv_pos"], axis_name)
-        agg0 = mean_agg(h, shard)
-        h1 = jax.nn.relu(h @ params.layer1.w_self + agg0 @ params.layer1.w_neigh
-                         + params.layer1.b)
-        h1 = _halo_exchange(h1, shard["send_idx"], shard["send_mask"],
-                            shard["recv_pos"], axis_name)
-        agg1 = mean_agg(h1, shard)
-        logits = (h1 @ params.layer2.w_self + agg1 @ params.layer2.w_neigh
-                  + params.layer2.b)
-        return logits
+        last = len(params.layers) - 1
+        for i, lp in enumerate(params.layers):
+            h = _halo_exchange(h, shard["send_idx"], shard["send_mask"],
+                               shard["recv_pos"], axis_name)
+            a = mean_agg(h, shard)
+            h = h @ lp.w_self + a @ lp.w_neigh + lp.b
+            if i < last:
+                h = jax.nn.relu(h)
+        return h
 
     return fwd
 
@@ -506,11 +505,11 @@ def make_cached_forward(model: GraphSAGE, pg_meta: dict,
                         axis_name: str = "data", agg=None,
                         refresh_lo: int = 0, refresh_hi: int | None = None,
                         ring_chunks: int = 0):
-    """Build the per-shard 2-layer forward against a HISTORICAL halo cache.
+    """Build the per-shard n-layer forward against a HISTORICAL halo cache.
 
     Returns ``fwd(params, shard, cache) -> (logits, new_cache)`` where
     ``cache`` holds each layer's last-received exchange buffers in recv
-    layout: ``{"h0": (P, maxS, D), "h1": (P, maxS, H)}`` per partition
+    layout: ``{"h0": (P, maxS, D), "h1": (P, maxS, H), ...}`` per partition
     (``cache["hl"][q]`` = the rows partition q last sent here for layer l).
     Pad slots are zero at init and the refresh writes sender-masked zeros
     into them, so landing the cache never dirties the trash row.
@@ -552,15 +551,15 @@ def make_cached_forward(model: GraphSAGE, pg_meta: dict,
 
     def fwd(params: SAGEParams, shard: dict, cache: dict):
         h = shard["features"]
-        h, c0 = land_and_refresh(h, shard, cache["h0"])
-        agg0 = mean_agg(h, shard)
-        h1 = jax.nn.relu(h @ params.layer1.w_self + agg0 @ params.layer1.w_neigh
-                         + params.layer1.b)
-        h1, c1 = land_and_refresh(h1, shard, cache["h1"])
-        agg1 = mean_agg(h1, shard)
-        logits = (h1 @ params.layer2.w_self + agg1 @ params.layer2.w_neigh
-                  + params.layer2.b)
-        return logits, {"h0": c0, "h1": c1}
+        last = len(params.layers) - 1
+        new_cache = {}
+        for i, lp in enumerate(params.layers):
+            h, new_cache[f"h{i}"] = land_and_refresh(h, shard, cache[f"h{i}"])
+            a = mean_agg(h, shard)
+            h = h @ lp.w_self + a @ lp.w_neigh + lp.b
+            if i < last:
+                h = jax.nn.relu(h)
+        return h, new_cache
 
     return fwd
 
@@ -568,7 +567,7 @@ def make_cached_forward(model: GraphSAGE, pg_meta: dict,
 def make_overlap_forward(model: GraphSAGE, pg_meta: dict,
                          axis_name: str = "data", agg_interior=None,
                          agg_boundary=None, ring_chunks: int = 0):
-    """Build the per-shard 2-layer OVERLAPPED forward (DESIGN.md §5).
+    """Build the per-shard n-layer OVERLAPPED forward (DESIGN.md §5).
 
     Per layer the program is issued in an order XLA's async collective
     scheduler can overlap on a real mesh:
@@ -628,8 +627,158 @@ def make_overlap_forward(model: GraphSAGE, pg_meta: dict,
 
     def fwd(params: SAGEParams, shard: dict) -> jnp.ndarray:
         h = shard["features"]
-        h1 = embed(split_layer(h, shard, params.layer1, activate=True))
-        logits = split_layer(h1, shard, params.layer2, activate=False)
-        return embed(logits)
+        last = len(params.layers) - 1
+        for i, lp in enumerate(params.layers):
+            h = embed(split_layer(h, shard, lp, activate=i < last))
+        return h
 
     return fwd
+
+
+def make_export_forward(model: GraphSAGE, pg_meta: dict,
+                        axis_name: str = "data", agg=None):
+    """Synchronous forward that ALSO materializes the serving handoff.
+
+    Returns ``fwd(params, shard) -> {"layers", "logits", "cache"}`` where
+    ``layers[i]`` is layer i's POST-exchange input embedding over the full
+    padded local space (owned rows + freshly landed halo rows), ``logits``
+    is bit-for-bit :func:`make_distributed_forward`'s output (same gather/
+    exchange/scatter spelling, same contraction order), and ``cache`` is
+    the recv-layout halo buffer snapshot ``{"h{i}": (P, maxS, D_i)}`` — the
+    exact arrays a full-refresh :func:`make_cached_forward` step would have
+    written, so the serving engine lands its halo rows from the same PR-6
+    cache geometry (``recv_pos`` slots) the training eval path uses.
+    """
+    max_nodes = pg_meta["max_nodes"]
+    mean_agg = agg if agg is not None else make_ref_mean_agg(max_nodes)
+
+    def fwd(params: SAGEParams, shard: dict) -> dict:
+        h = shard["features"]
+        last = len(params.layers) - 1
+        layers, cache = [], {}
+        for i, lp in enumerate(params.layers):
+            sent = h[shard["send_idx"]] * shard["send_mask"][..., None]
+            recv = _exchange(sent, axis_name)
+            h = h.at[shard["recv_pos"].reshape(-1)].set(
+                recv.reshape(-1, h.shape[-1]).astype(h.dtype))
+            cache[f"h{i}"] = recv
+            layers.append(h)
+            a = mean_agg(h, shard)
+            h = h @ lp.w_self + a @ lp.w_neigh + lp.b
+            if i < last:
+                h = jax.nn.relu(h)
+        return {"layers": tuple(layers), "logits": h, "cache": cache}
+
+    return fwd
+
+
+class RecomputePlanner:
+    """Dirty-set propagation over the partitioned CSR shards (serving).
+
+    Built once from a :class:`PartitionedGraph`; answers "after these rows'
+    layer-(l-1) embeddings changed, which OWNED rows must recompute layer
+    l?" per partition, including the replica mirroring between layers that
+    keeps halo copies consistent with their owners.
+
+    The rule per layer (DESIGN.md §9): a row recomputes iff its own input
+    changed (self term) or a local in-neighbour's input changed (edges are
+    stored dst-major per partition; the planner holds the src-major CSC
+    mirror of the same local edge lists).  Rows whose IN-EDGES changed are
+    seeded at layer 1 and carried forward by the self term.  Edge removals
+    deliberately leave the planner adjacency untouched: stale out-edges can
+    only over-propagate (recompute a clean row to the same value), never
+    under-propagate, so correctness needs no CSC deletion.
+
+    The replica map comes from the send/recv lists: owner p's local row
+    ``send_idx[p, q, s]`` has a halo copy at q's ``recv_pos[q, p, s]``.
+    Serving-time halo growth registers new replicas / out-edges through
+    :meth:`add_replica` / :meth:`add_out_edge`.
+    """
+
+    def __init__(self, pg: PartitionedGraph):
+        P = pg.num_parts
+        self.num_parts = P
+        self.n_own = np.asarray(pg.n_own).copy()
+        self._csc = []
+        for p in range(P):
+            real = np.asarray(pg.edge_mask[p]) > 0
+            src = np.asarray(pg.edge_src[p])[real].astype(np.int64)
+            dst = np.asarray(pg.edge_dst[p])[real].astype(np.int64)
+            order = np.argsort(src, kind="stable")
+            n_rows = int(pg.max_nodes)
+            counts = np.bincount(src, minlength=n_rows)
+            ptr = np.zeros(n_rows + 1, np.int64)
+            np.cumsum(counts, out=ptr[1:])
+            self._csc.append((ptr, dst[order]))
+        # dynamically added out-edges (src_local -> [dst_local]) per part
+        self._extra_out: list[dict[int, list[int]]] = [{} for _ in range(P)]
+        # replica lists: owner p's local row -> [(peer q, q's halo row)]
+        self._rep: list[dict[int, list[tuple[int, int]]]] = [{} for _ in range(P)]
+        send_idx = np.asarray(pg.send_idx)
+        send_mask = np.asarray(pg.send_mask)
+        recv_pos = np.asarray(pg.recv_pos)
+        for p in range(P):
+            for q in range(P):
+                m = send_mask[p, q] > 0
+                for s_loc, r_loc in zip(send_idx[p, q][m], recv_pos[q, p][m]):
+                    self._rep[p].setdefault(int(s_loc), []).append((q, int(r_loc)))
+
+    # ------------------------------------------------------------- mutation
+    def add_out_edge(self, p: int, src_local: int, dst_local: int) -> None:
+        self._extra_out[p].setdefault(int(src_local), []).append(int(dst_local))
+
+    def add_replica(self, owner: int, row: int, peer: int, peer_row: int) -> None:
+        self._rep[owner].setdefault(int(row), []).append((peer, int(peer_row)))
+
+    # -------------------------------------------------------------- queries
+    def replicas(self, p: int, rows: np.ndarray):
+        """(peer, peer_row, owner_row) triples for every replica of ``rows``."""
+        rep = self._rep[p]
+        for r in np.asarray(rows):
+            for q, qrow in rep.get(int(r), ()):
+                yield q, qrow, int(r)
+
+    def out_rows(self, p: int, rows: np.ndarray) -> np.ndarray:
+        """Local out-neighbours (always owned rows: edges target dst-owned)."""
+        ptr, dst = self._csc[p]
+        extra = self._extra_out[p]
+        segs = []
+        n_static = len(ptr) - 1
+        for r in np.asarray(rows):
+            r = int(r)
+            if r < n_static:
+                segs.append(dst[ptr[r]:ptr[r + 1]])
+            if r in extra:
+                segs.append(np.asarray(extra[r], np.int64))
+        if not segs:
+            return np.empty(0, np.int64)
+        return np.unique(np.concatenate(segs))
+
+    def propagate(self, dirty_h0: dict[int, np.ndarray],
+                  edge_seeds: dict[int, np.ndarray],
+                  num_layers: int) -> list[dict[int, np.ndarray]]:
+        """``plans[l-1][p]`` = sorted owned rows partition p recomputes at
+        layer l (1-based), given local rows (owned or halo) whose input
+        features changed and owned rows whose in-edge lists changed."""
+        P = self.num_parts
+        empty = np.empty(0, np.int64)
+        cur = {p: np.unique(np.asarray(dirty_h0.get(p, empty), np.int64))
+               for p in range(P)}
+        plans: list[dict[int, np.ndarray]] = []
+        for l in range(1, num_layers + 1):
+            rec = {}
+            for p in range(P):
+                parts = [self.out_rows(p, cur[p]),
+                         cur[p][cur[p] < self.n_own[p]]]
+                if l == 1:
+                    parts.append(np.asarray(
+                        sorted(edge_seeds.get(p, ())), np.int64))
+                rec[p] = np.unique(np.concatenate(parts)) if parts else empty
+            plans.append(rec)
+            if l < num_layers:
+                nxt = {p: [rec[p]] for p in range(P)}
+                for p in range(P):
+                    for q, qrow, _ in self.replicas(p, rec[p]):
+                        nxt[q].append(np.asarray([qrow], np.int64))
+                cur = {p: np.unique(np.concatenate(nxt[p])) for p in range(P)}
+        return plans

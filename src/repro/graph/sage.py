@@ -39,8 +39,22 @@ class SAGELayer(NamedTuple):
 
 
 class SAGEParams(NamedTuple):
-    layer1: SAGELayer
-    layer2: SAGELayer
+    """Stack of SAGE layers (any depth >= 1), one pytree.
+
+    ``layer1``/``layer2`` are views kept for the fixed-two-layer call
+    sites (the sampled training path and its tests): first and LAST
+    layer respectively, which coincides with the old fields at depth 2.
+    """
+
+    layers: tuple[SAGELayer, ...]
+
+    @property
+    def layer1(self) -> SAGELayer:
+        return self.layers[0]
+
+    @property
+    def layer2(self) -> SAGELayer:
+        return self.layers[-1]
 
 
 def _glorot(rng: np.random.Generator, shape: tuple[int, ...]) -> jnp.ndarray:
@@ -56,13 +70,28 @@ class GraphSAGE:
     feature_dim: int
     hidden_dim: int
     num_classes: int
+    num_layers: int = 2
     l2_normalize: bool = False
     dropout: float = 0.0  # applied to inputs of each layer when training
 
+    @property
+    def layer_dims(self) -> tuple[int, ...]:
+        """Per-layer (input, ..., output) widths: (D, H, ..., H, C)."""
+        return ((self.feature_dim,)
+                + (self.hidden_dim,) * (self.num_layers - 1)
+                + (self.num_classes,))
+
+    @property
+    def layer_input_dims(self) -> tuple[int, ...]:
+        """Width of the embedding each layer's halo exchange ships."""
+        return self.layer_dims[:-1]
+
     # ---------------------------------------------------------------- init
     def init(self, seed: int = 0) -> SAGEParams:
+        if self.num_layers < 1:
+            raise ValueError(f"num_layers must be >= 1, got {self.num_layers}")
         rng = np.random.default_rng([seed, 0x5A6E])
-        d, h, c = self.feature_dim, self.hidden_dim, self.num_classes
+        dims = self.layer_dims
 
         def layer(d_in: int, d_out: int) -> SAGELayer:
             return SAGELayer(
@@ -71,7 +100,8 @@ class GraphSAGE:
                 b=jnp.zeros((d_out,), jnp.float32),
             )
 
-        return SAGEParams(layer1=layer(d, h), layer2=layer(h, c))
+        return SAGEParams(layers=tuple(
+            layer(dims[i], dims[i + 1]) for i in range(self.num_layers)))
 
     # ------------------------------------------------------------- helpers
     def _layer(self, lp: SAGELayer, h_self: jnp.ndarray, h_neigh: jnp.ndarray,
@@ -120,6 +150,10 @@ class GraphSAGE:
         dropout_key=None,
     ) -> jnp.ndarray:
         """Two-layer sampled forward -> (B, num_classes) logits."""
+        if self.num_layers != 2:
+            raise ValueError(
+                "apply_sampled is the paper's fixed two-layer fanout path; "
+                f"got num_layers={self.num_layers}")
         k1 = k2 = None
         if dropout_key is not None:
             k1, k2 = jax.random.split(dropout_key)
@@ -150,7 +184,7 @@ class GraphSAGE:
         use_pallas: bool = True,
         interpret: bool = True,
     ) -> jnp.ndarray:
-        """Full-graph 2-layer forward -> (N, num_classes) logits.
+        """Full-graph n-layer forward -> (N, num_classes) logits.
 
         Differentiable end-to-end: the Pallas path (default) goes through
         the custom-VJP ``segment_mean_op``, the ``use_pallas=False`` path
@@ -179,9 +213,11 @@ class GraphSAGE:
             mean_agg = lambda h: segment_agg_ref(
                 h, edge_src, edge_dst, num_nodes, mean=True)
 
-        h1 = self._layer(params.layer1, features, mean_agg(features), activate=True)
-        logits = self._layer(params.layer2, h1, mean_agg(h1), activate=False)
-        return logits
+        h = features
+        last = len(params.layers) - 1
+        for i, lp in enumerate(params.layers):
+            h = self._layer(lp, h, mean_agg(h), activate=i < last)
+        return h
 
     # ------------------------------------------------------------ loss fns
     def make_loss_fn(self, loss="ce", focal_gamma: float = 2.0):

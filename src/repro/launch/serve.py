@@ -1,10 +1,18 @@
-"""Serving driver (CLI): batched generation with any zoo architecture.
+"""Serving driver (CLI): batched generation with any zoo architecture, or
+the partitioned GNN inference service.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --batch 4 --prompt-len 32 --new-tokens 16 [--swa]
 
-On CPU this runs the REDUCED config; on TPU hardware the same ServeEngine
-steps are what the decode dry-run shapes lower for the production mesh.
+    PYTHONPATH=src python -m repro.launch.serve --gnn --dataset tiny \
+        --parts 4 --ticks 20 --updates-per-tick 4 --queries-per-tick 16 \
+        [--checkpoint results/ckpt.msgpack]
+
+On CPU the transformer path runs the REDUCED config; on TPU hardware the
+same ServeEngine steps are what the decode dry-run shapes lower for the
+production mesh.  The GNN path precomputes per-partition layer embeddings
+from an ``SPMDEngine`` export, then serves a synthetic request stream of
+feature updates + logit queries with incremental recomputation.
 """
 from __future__ import annotations
 
@@ -20,8 +28,68 @@ from repro.models import Transformer
 from repro.serve import ServeEngine
 
 
+def gnn_main(args) -> int:
+    from repro.core import GPHyperParams, partition_graph
+    from repro.engine import EngineConfig, SPMDEngine
+    from repro.graph import (BENCHMARKS, GraphSAGE, build_partitioned_graph,
+                             make_benchmark)
+    from repro.serve import GNNServingEngine
+    from repro.train.optim import AdamW
+
+    g = make_benchmark(BENCHMARKS[args.dataset])
+    r = partition_graph(g.indptr, g.indices, g.features, g.labels,
+                        args.parts, method="ew", seed=args.seed)
+    pg = build_partitioned_graph(g, r.parts, args.parts)
+    model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=args.hidden,
+                      num_classes=g.num_classes)
+    eng = SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3), pg,
+                     GPHyperParams(),
+                     EngineConfig(mode="stacked", use_pallas_agg=False))
+    if args.checkpoint:
+        srv = GNNServingEngine.from_checkpoint(args.checkpoint, eng, pg)
+    else:
+        srv = GNNServingEngine.from_engine(eng, pg, model.init(args.seed))
+    print(f"{g.name}: {g.num_nodes} nodes, P={args.parts}, "
+          f"{model.num_layers}-layer SAGE, store ready "
+          f"(halo rows live in recv-slot geometry)")
+
+    rng = np.random.default_rng(args.seed)
+    lat = []
+    t_start = time.time()
+    for _ in range(args.ticks):
+        for v in rng.choice(g.num_nodes, args.updates_per_tick,
+                            replace=False):
+            srv.update_features(int(v), rng.normal(
+                0, 1, g.feature_dim).astype(np.float32))
+        srv.submit(rng.choice(g.num_nodes, args.queries_per_tick,
+                              replace=False))
+        t0 = time.perf_counter()
+        srv.tick()
+        lat.append(time.perf_counter() - t0)
+    wall = time.time() - t_start
+    qps = args.ticks * args.queries_per_tick / wall
+    p50, p99 = np.percentile(lat, [50, 99])
+    s = srv.stats
+    print(f"{args.ticks} ticks x ({args.updates_per_tick} updates + "
+          f"{args.queries_per_tick} queries): p50 {p50 * 1e3:.1f} ms, "
+          f"p99 {p99 * 1e3:.1f} ms, {qps:.0f} queries/s")
+    print(f"rows recomputed {s['rows_recomputed']}, gather calls "
+          f"{s['gather_calls']}, halo rows grown {s['halo_rows_grown']}")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--gnn", action="store_true",
+                    help="serve the partitioned GNN instead of a "
+                         "transformer")
+    ap.add_argument("--dataset", default="tiny")
+    ap.add_argument("--parts", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--ticks", type=int, default=20)
+    ap.add_argument("--updates-per-tick", type=int, default=4)
+    ap.add_argument("--queries-per-tick", type=int, default=16)
+    ap.add_argument("--checkpoint", default="")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -31,6 +99,9 @@ def main() -> int:
                     help="rolling sliding-window cache serving variant")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.gnn:
+        return gnn_main(args)
 
     cfg = get_config(args.arch, "swa" if args.swa else None).reduced()
     model = Transformer(cfg)

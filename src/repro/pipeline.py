@@ -375,7 +375,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         # exchange otherwise
         if cfg.halo_cache:
             return int(engine.last_halo_exchange_bytes)
-        return 2 * pg.halo_bytes_per_layer
+        return model.num_layers * pg.halo_bytes_per_layer
 
     def make_batch(nodes: np.ndarray) -> dict:
         # fixed shapes (pad + mask) so batches stack across hosts and the
@@ -464,9 +464,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     # the same send/recv lists), plus the per-epoch validation forward's
     # per-layer exchange — which the sampled path's accounting also counts
     # — and fetch no sampled neighbours
-    fg_halo_bytes_per_epoch = (4 * pg.halo_bytes_per_layer
+    fg_halo_bytes_per_epoch = (2 * model.num_layers * pg.halo_bytes_per_layer
                                * cfg.full_graph_iters
-                               + 2 * pg.halo_bytes_per_layer)
+                               + model.num_layers * pg.halo_bytes_per_layer)
 
     host_to_device_p0 = 0
     p0_iter_hist: list[int] = []
@@ -479,7 +479,8 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
             iters = np.asarray(losses).shape[0]
             t_host = np.zeros(n_parts)      # no host sampling on this path
             comm_halo_p0 += fg_halo_bytes_per_epoch
-            halo_exchange_hist.append(2 * pg.halo_bytes_per_layer)
+            halo_exchange_hist.append(model.num_layers
+                                      * pg.halo_bytes_per_layer)
         elif async_phase0:
             # one device program per epoch: draw + train scan + fused eval.
             # The only host→device payload is the per-partition PRNG keys.

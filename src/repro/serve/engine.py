@@ -41,9 +41,16 @@ class ServeEngine:
         temperature: float = 0.0,
         seed: int = 0,
         eos_id: int | None = None,
+        truncate_done: bool = False,
     ) -> np.ndarray:
         """batch: {"tokens": (B, S)[, "patch_embeds"/"enc_embeds"]} ->
-        (B, max_new_tokens) generated ids (greedy if temperature == 0)."""
+        (B, max_new_tokens) generated ids (greedy if temperature == 0).
+
+        When every row has emitted ``eos_id`` the decode loop stops early,
+        but the result is still padded to ``max_new_tokens`` with ``eos_id``
+        so the output shape depends only on the arguments — not on which
+        rows happened to share the batch.  ``truncate_done=True`` restores
+        the old width-varies-with-batch truncating behavior."""
         key = jax.random.key(seed)
         logits, caches, cache_len = self._prefill(self.params, batch)
         b = logits.shape[0]
@@ -65,7 +72,10 @@ class ServeEngine:
             if eos_id is not None:
                 done |= tok_np == eos_id
                 if done.all():
-                    out = out[:, : t + 1]
+                    if truncate_done:
+                        out = out[:, : t + 1]
+                    else:
+                        out[:, t + 1:] = eos_id
                     break
             if t + 1 < max_new_tokens:   # the last token needs no decode
                 logits, caches = self._decode(

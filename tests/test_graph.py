@@ -242,3 +242,85 @@ def test_distributed_forward_matches_centralized():
                               "HOME": "/root"})
     assert res.returncode == 0, res.stderr[-2000:]
     assert "OK" in res.stdout
+
+# ------------------------------------------------------- halo_refresh_plan --
+
+def _plan_cycle(K, max_send, cv=True, start_age=0):
+    """The chunk ranges one cache generation schedules: ages
+    [start_age, start_age + K) with the full refresh at age % K == 0."""
+    from repro.graph.distributed import halo_refresh_plan
+
+    return [halo_refresh_plan(a, K, cv, max_send)
+            for a in range(start_age, start_age + K)]
+
+
+def test_refresh_plan_full_at_cycle_start():
+    from repro.graph.distributed import halo_refresh_plan
+
+    for K in (1, 2, 3, 7):
+        for ms in (0, 1, 5, 64):
+            for cv in (False, True):
+                assert halo_refresh_plan(0, K, cv, ms) == (0, ms)
+                assert halo_refresh_plan(3 * K, K, cv, ms) == (0, ms)
+
+
+def test_refresh_plan_chunks_partition_slot_space():
+    """CV cached epochs cut [0, max_send) into EXACTLY K-1 contiguous
+    back-to-back chunks — no slot skipped, none re-sent within a cycle."""
+    for K in (2, 3, 4, 5, 8):
+        for ms in (0, 1, 2, K - 2, K - 1, K, 3 * K + 1, 257):
+            if ms < 0:
+                continue
+            plans = _plan_cycle(K, ms)[1:]          # drop the full refresh
+            assert plans[0][0] == 0
+            assert plans[-1][1] == ms
+            for (l0, h0), (l1, h1) in zip(plans, plans[1:]):
+                assert h0 == l1                     # contiguous, gap-free
+            assert all(lo <= hi for lo, hi in plans)
+            assert sum(hi - lo for lo, hi in plans) == ms
+
+
+def test_refresh_plan_small_max_send_covered_within_K():
+    """max_send < K - 1: more chunks than slots, so some cached epochs ship
+    nothing — but every slot is still refreshed within K epochs."""
+    for K, ms in ((5, 2), (8, 3), (16, 1), (7, 0)):
+        plans = _plan_cycle(K, ms)
+        covered = set()
+        for lo, hi in plans:
+            covered.update(range(lo, hi))
+        assert covered == set(range(ms))
+        empties = sum(1 for lo, hi in plans[1:] if lo == hi)
+        assert empties == (K - 1) - ms if ms < K - 1 else empties == 0
+
+
+def test_refresh_plan_cv_off_ships_nothing_between_refreshes():
+    from repro.graph.distributed import halo_refresh_plan
+
+    for K in (2, 3, 9):
+        for age in range(1, K):
+            assert halo_refresh_plan(age, K, False, 40) == (0, 0)
+
+
+@settings(max_examples=120)
+@given(st.integers(1, 64), st.integers(0, 512), st.integers(0, 1000),
+       st.booleans())
+def test_refresh_plan_properties(K, max_send, age0, cv):
+    """Adversarial (K, max_send) pairs: over ANY window of K consecutive
+    ages the plan re-exchanges every slot at least once, ranges stay inside
+    [0, max_send), and per-epoch payload never exceeds the full refresh."""
+    from repro.graph.distributed import halo_refresh_plan
+
+    covered = set()
+    for age in range(age0, age0 + K):
+        lo, hi = halo_refresh_plan(age, K, cv, max_send)
+        assert 0 <= lo <= hi <= max_send
+        covered.update(range(lo, hi))
+    assert covered == set(range(max_send))   # staleness bound: <= K epochs
+    if cv and K > 1 and max_send >= K - 1:
+        # cached epochs pay ~1/(K-1) of the payload, never more than
+        # ceil(max_send / (K-1))
+        cap = -(-max_send // (K - 1))
+        for age in range(age0, age0 + K):
+            if age % K:
+                lo, hi = halo_refresh_plan(age, K, cv, max_send)
+                assert hi - lo <= cap

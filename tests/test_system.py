@@ -179,7 +179,11 @@ def test_serve_engine_freezes_rows_past_eos():
               [1, 2, 3, 4, 5]])
 
 
-def test_serve_engine_truncates_when_all_done():
+def test_serve_engine_pads_to_max_new_tokens_when_all_done():
+    """Regression: the return width must depend only on max_new_tokens, not
+    on when this particular batch finished — early-done batches pad the
+    tail with eos_id (a lone row's shape can't change because a slower row
+    shared its batch)."""
     from repro.serve import ServeEngine
 
     eos = 9
@@ -187,6 +191,23 @@ def test_serve_engine_truncates_when_all_done():
     engine = ServeEngine(_ScriptedModel(script), params=None, cache_size=8)
     out = engine.generate({"tokens": np.zeros((2, 4), np.int32)},
                           max_new_tokens=5, eos_id=eos)
+    np.testing.assert_array_equal(out, [[3, eos, eos, eos, eos],
+                                        [eos, eos, eos, eos, eos]])
+    # batch composition must not change a row's output
+    solo = ServeEngine(_ScriptedModel(script[:1]), params=None, cache_size=8)
+    out_solo = solo.generate({"tokens": np.zeros((1, 4), np.int32)},
+                             max_new_tokens=5, eos_id=eos)
+    np.testing.assert_array_equal(out_solo, out[:1])
+
+
+def test_serve_engine_truncates_when_all_done_with_flag():
+    from repro.serve import ServeEngine
+
+    eos = 9
+    script = np.array([[3, eos, 1, 1, 1], [eos, 2, 2, 2, 2]])
+    engine = ServeEngine(_ScriptedModel(script), params=None, cache_size=8)
+    out = engine.generate({"tokens": np.zeros((2, 4), np.int32)},
+                          max_new_tokens=5, eos_id=eos, truncate_done=True)
     np.testing.assert_array_equal(out, [[3, eos], [eos, eos]])
 
 
