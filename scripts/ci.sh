@@ -19,6 +19,11 @@
 #                          recomputation after scripted updates must be
 #                          BITWISE a from-scratch forward over the rebuilt
 #                          graph (runs outside the 30 s gate)
+#   scripts/ci.sh faults   robustness smoke only: injected kill-at-epoch ->
+#                          resume must be bitwise the uninterrupted run,
+#                          plus one degraded serving tick (frozen-store
+#                          answer + staleness tag + queued replay); runs
+#                          outside the 30 s gate
 #   scripts/ci.sh timing   the timing quarantine lane only: wall-clock-
 #                          sensitive tests, one automatic retry, never part
 #                          of the 30 s runtime gate
@@ -220,9 +225,83 @@ if [ "$mode" = "serve" ]; then
     exit 0
 fi
 
+# ---- faults smoke ----------------------------------------------------------
+# Fourth fail-fast witness: the PR-8 robustness layer.  A run killed by an
+# injected crash at an epoch boundary and resumed from its checksummed
+# checkpoint must finish with final params BIT-FOR-BIT identical to the
+# uninterrupted run (f32 stacked here; the fp64 stacked+shard_map matrix
+# runs in tests/test_robustness.py), and one degraded serving tick must
+# answer a failed partition's query from its frozen store with a staleness
+# tag while queueing the update for replay.  Not a pytest test, so it sits
+# outside the 30 s runtime gate by construction.
+faults_smoke() {
+    python - <<'PY'
+import os, tempfile
+import numpy as np, jax
+from repro.pipeline import EATConfig, run_eat_distgnn
+from repro.robustness import FaultPlan, InjectedCrash
+
+KW = dict(dataset="tiny", num_parts=4, batch_size=32, hidden_dim=16,
+          fanouts=(3, 3), max_epochs=6, phase0_fraction=0.5, seed=7,
+          engine_mode="stacked", halo_cache=True, halo_refresh_every=2)
+base = run_eat_distgnn(EATConfig(**KW))
+ck = tempfile.mkdtemp()
+try:
+    run_eat_distgnn(EATConfig(**KW, checkpoint_dir=ck),
+                    fault_plan=FaultPlan(crash_epochs=frozenset({4})))
+    raise AssertionError("injected crash did not fire")
+except InjectedCrash:
+    pass
+res = run_eat_distgnn(EATConfig(**KW, checkpoint_dir=ck, resume=True))
+assert res.resumed_from_epoch == 4, res.resumed_from_epoch
+la, lb = jax.tree.leaves(base.final_params), jax.tree.leaves(res.final_params)
+assert all(np.array_equal(np.asarray(a), np.asarray(b))
+           for a, b in zip(la, lb)), "resume is not bitwise"
+assert res.f1.micro == base.f1.micro and res.val_history == base.val_history
+
+# one degraded serving tick
+from repro.core import partition_graph, GPHyperParams
+from repro.engine import EngineConfig, SPMDEngine
+from repro.graph import (BENCHMARKS, GraphSAGE, build_partitioned_graph,
+                         make_benchmark)
+from repro.serve import GNNServingEngine
+from repro.train.optim import AdamW
+g = make_benchmark(BENCHMARKS["tiny"])
+r = partition_graph(g.indptr, g.indices, g.features, g.labels, 4,
+                    method="ew", seed=0)
+pg = build_partitioned_graph(g, r.parts, 4)
+model = GraphSAGE(feature_dim=g.feature_dim, hidden_dim=16,
+                  num_classes=g.num_classes)
+eng = SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3), pg,
+                 GPHyperParams(),
+                 EngineConfig(mode="stacked", use_pallas_agg=False))
+srv = GNNServingEngine.from_engine(eng, pg, model.init(0))
+gid = int(np.where(srv.owner_part == 1)[0][0])
+frozen = srv.h[0][1][int(srv.owner_row[gid])].copy()
+srv.fail_partition(1)
+srv.update_features(gid, np.ones(g.feature_dim, np.float32))
+assert srv.stats["updates_queued"] == 1
+assert (srv.h[0][1][int(srv.owner_row[gid])] == frozen).all()
+srv.submit([gid])
+results, st = srv.tick()
+assert gid in results and st["staleness"] == {gid: 1}, st
+srv.recover_partition(1)
+srv.tick()
+assert srv.stats["replayed"] == 1 and not srv._queue
+print("faults smoke OK (kill@4 -> resume bitwise; degraded tick answered "
+      f"stale query, queued+replayed the update)")
+PY
+}
+
+if [ "$mode" = "faults" ]; then
+    faults_smoke || exit 1
+    exit 0
+fi
+
 grad_smoke || { echo "REGRESSION: grad-parity smoke failed"; exit 1; }
 halo_cache_smoke || { echo "REGRESSION: halo-cache smoke failed"; exit 1; }
 serve_smoke || { echo "REGRESSION: serving smoke failed"; exit 1; }
+faults_smoke || { echo "REGRESSION: faults smoke failed"; exit 1; }
 
 out=$(python -m pytest -m "not slow and not timing" -q --durations=0 2>&1)
 pytest_status=$?

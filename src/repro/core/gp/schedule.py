@@ -54,6 +54,20 @@ class EarlyStopper:
             self.stopped = True
         return False
 
+    def state_dict(self) -> dict:
+        """JSON-safe snapshot (-inf survives the json round trip)."""
+        return {"patience": self.patience, "min_delta": self.min_delta,
+                "best": self.best, "best_epoch": self.best_epoch,
+                "bad_epochs": self.bad_epochs, "stopped": self.stopped}
+
+    def load_state_dict(self, d: dict) -> None:
+        self.patience = int(d["patience"])
+        self.min_delta = float(d["min_delta"])
+        self.best = float(d["best"])
+        self.best_epoch = int(d["best_epoch"])
+        self.bad_epochs = int(d["bad_epochs"])
+        self.stopped = bool(d["stopped"])
+
 
 @dataclass
 class GPScheduleConfig:
@@ -161,3 +175,29 @@ class GPController:
         if self.phase == 1:
             return not self.active_partitions.any()
         return False
+
+    # -- resume serialization ---------------------------------------------
+    def state_dict(self) -> dict:
+        """Full controller state as JSON-safe scalars/lists — everything the
+        epoch loop's control flow depends on (RunCheckpointer host state)."""
+        return {
+            "phase": self.phase,
+            "epoch": self.epoch,
+            "loss_history": list(self.loss_history),
+            "personalize_start_epoch": self.personalize_start_epoch,
+            "phase0_stopper": self.phase0_stopper.state_dict(),
+            "phase1_stoppers": [s.state_dict() for s in self.phase1_stoppers],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        if len(d["phase1_stoppers"]) != self.num_partitions:
+            raise ValueError(
+                f"controller state for {len(d['phase1_stoppers'])} partitions "
+                f"cannot restore into {self.num_partitions}")
+        self.phase = int(d["phase"])
+        self.epoch = int(d["epoch"])
+        self.loss_history = [float(x) for x in d["loss_history"]]
+        self.personalize_start_epoch = int(d["personalize_start_epoch"])
+        self.phase0_stopper.load_state_dict(d["phase0_stopper"])
+        for s, sd in zip(self.phase1_stoppers, d["phase1_stoppers"]):
+            s.load_state_dict(sd)

@@ -99,6 +99,7 @@ class SequentialReference:
                           for _ in range(Pn)]
                 for i, d in enumerate(model.layer_input_dims)}
             self._halo_age = 0
+        self._halo_dtype = f
         self._grad_step = jax.jit(jax.value_and_grad(loss_fn))
         self._pstep1 = jax.jit(make_personalize_partition_step(
             loss_fn, optimizer, hp))
@@ -494,3 +495,17 @@ class SequentialReference:
         else:
             plist = [params] * P
         return self._eval(plist, split)
+
+    # ---- checkpoint/resume surface (mirrors SPMDEngine) ------------------
+    def halo_cache_state(self):
+        """(cache pytree, age) for checkpointing; None without the cache."""
+        if not self.halo_cache:
+            return None
+        return self._halo_state, self._halo_age
+
+    def restore_halo_cache_state(self, state, age: int) -> None:
+        if not self.halo_cache:
+            raise ValueError("engine built without halo_cache")
+        self._halo_state = jax.tree.map(
+            lambda x: jnp.asarray(x, self._halo_dtype), state)
+        self._halo_age = int(age)

@@ -236,6 +236,11 @@ class SPMDEngine:
                 build_stacked_halo_cache(pg, model.layer_input_dims))
             self._halo_age = 0
             self._cached_fwds: dict = {}
+        # fault injection (DESIGN.md §10): when armed, the next eval
+        # forward's freshly exchanged cache payload is "lost in transit" —
+        # the stale cache is kept and ages on
+        self._drop_next_refresh = False
+        self.halo_refresh_drops = 0
         # full-graph phase-0: value_and_grad straight through self.fwd (the
         # halo-exchange forward whose aggregation op carries a custom VJP)
         self._fg_loss = make_fullgraph_loss_fn(self.fwd, loss=config.fg_loss)
@@ -287,6 +292,10 @@ class SPMDEngine:
     # executable and the pure-cached one contains no collective at all.
 
     def _halo_plan(self) -> tuple[int, int]:
+        if self._drop_next_refresh:
+            self._drop_next_refresh = False
+            self.halo_refresh_drops += 1
+            return (0, 0)
         return halo_refresh_plan(self._halo_age, self.config.halo_refresh_every,
                                  self.config.halo_cv, self.max_send)
 
@@ -299,6 +308,27 @@ class SPMDEngine:
         self.last_halo_exchange_bytes = (self.model.num_layers
                                          * self._halo_slot_bytes(*plan))
         self._halo_age += 1
+
+    def drop_next_halo_refresh(self) -> None:
+        """Arm the dropped-payload fault: the next eval forward runs the
+        pure-cached plan (0, 0) — it aggregates fully against the stale
+        cache and ships no refresh bytes, exactly as if the scheduled
+        payload was lost in transit — while the cache still ages."""
+        self._drop_next_refresh = True
+
+    # ---- checkpoint/resume surface (RunCheckpointer) ---------------------
+    def halo_cache_state(self):
+        """(cache pytree, age) for checkpointing; None without the cache."""
+        if not self.halo_cache:
+            return None
+        return self._halo_state, self._halo_age
+
+    def restore_halo_cache_state(self, state, age: int) -> None:
+        if not self.halo_cache:
+            raise ValueError("engine built without halo_cache")
+        f = self.config.dtype
+        self._halo_state = jax.tree.map(lambda x: jnp.asarray(x, f), state)
+        self._halo_age = int(age)
 
     def _cached_fwd(self, lo: int, hi: int):
         key = (lo, hi)

@@ -53,8 +53,19 @@ def gnn_main(args) -> int:
           f"{model.num_layers}-layer SAGE, store ready "
           f"(halo rows live in recv-slot geometry)")
 
+    if args.fail_partition >= 0:
+        from repro.robustness import FaultPlan
+        fail_tick = max(1, args.fail_at_tick)
+        srv.set_fault_plan(FaultPlan(
+            serve_fail={fail_tick: (args.fail_partition,)},
+            serve_recover={fail_tick + args.recover_after_ticks:
+                           (args.fail_partition,)}))
+        print(f"fault plan: partition {args.fail_partition} fails at tick "
+              f"{fail_tick}, recovers after {args.recover_after_ticks} ticks")
+
     rng = np.random.default_rng(args.seed)
     lat = []
+    stale_answers = 0
     t_start = time.time()
     for _ in range(args.ticks):
         for v in rng.choice(g.num_nodes, args.updates_per_tick,
@@ -64,8 +75,9 @@ def gnn_main(args) -> int:
         srv.submit(rng.choice(g.num_nodes, args.queries_per_tick,
                               replace=False))
         t0 = time.perf_counter()
-        srv.tick()
+        _, tick_stats = srv.tick()
         lat.append(time.perf_counter() - t0)
+        stale_answers += len(tick_stats.get("staleness", {}))
     wall = time.time() - t_start
     qps = args.ticks * args.queries_per_tick / wall
     p50, p99 = np.percentile(lat, [50, 99])
@@ -75,6 +87,13 @@ def gnn_main(args) -> int:
           f"p99 {p99 * 1e3:.1f} ms, {qps:.0f} queries/s")
     print(f"rows recomputed {s['rows_recomputed']}, gather calls "
           f"{s['gather_calls']}, halo rows grown {s['halo_rows_grown']}")
+    if s["failovers"] or s["updates_queued"]:
+        print(f"degraded mode: {s['failovers']} failover(s), "
+              f"{s['degraded_queries']} degraded queries "
+              f"({stale_answers} stale answers), {s['updates_queued']} "
+              f"updates queued, {s['replay_attempts']} replay attempts, "
+              f"{s['replayed']} replayed after {s['recoveries']} "
+              f"recovery(ies); final health {srv.health}")
     return 0
 
 
@@ -90,6 +109,12 @@ def main() -> int:
     ap.add_argument("--updates-per-tick", type=int, default=4)
     ap.add_argument("--queries-per-tick", type=int, default=16)
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--fail-partition", type=int, default=-1,
+                    help="GNN degraded-mode demo: fail this partition "
+                         "mid-stream (queries keep answering from its "
+                         "frozen store, updates queue)")
+    ap.add_argument("--fail-at-tick", type=int, default=5)
+    ap.add_argument("--recover-after-ticks", type=int, default=8)
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

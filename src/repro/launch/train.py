@@ -69,8 +69,18 @@ def run_gnn(args) -> dict:
         halo_cache=args.halo_cache,
         halo_refresh_every=args.halo_refresh_every,
         halo_cv=args.halo_cv,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        keep_checkpoints=args.keep_checkpoints,
+        resume=args.resume,
     )
-    result = run_eat_distgnn(cfg, verbose=True)
+    fault_plan = None
+    if args.crash_at_epoch or args.drop_refresh_at:
+        from repro.robustness import FaultPlan
+        fault_plan = FaultPlan(
+            crash_epochs=frozenset(args.crash_at_epoch or ()),
+            drop_refresh_epochs=frozenset(args.drop_refresh_at or ()))
+    result = run_eat_distgnn(cfg, verbose=True, fault_plan=fault_plan)
     print(json.dumps(result.summary(), indent=2))
     return result.summary()
 
@@ -229,6 +239,25 @@ def main() -> int:
     g.add_argument("--no-double-buffer", action="store_true",
                    help="disable overlapping host-side sampling of epoch "
                         "t+1 with the device step of epoch t")
+    g.add_argument("--checkpoint-dir", default=None,
+                   help="save an epoch-granular full-pipeline checkpoint "
+                        "here (atomic, checksummed, last "
+                        "--keep-checkpoints retained)")
+    g.add_argument("--checkpoint-every", type=int, default=1,
+                   help="checkpoint every k-th epoch boundary")
+    g.add_argument("--keep-checkpoints", type=int, default=3)
+    g.add_argument("--resume", action="store_true",
+                   help="resume from the newest intact checkpoint in "
+                        "--checkpoint-dir; the finished run is bit-for-bit "
+                        "the uninterrupted one")
+    g.add_argument("--crash-at-epoch", type=int, nargs="*", default=None,
+                   metavar="E",
+                   help="fault injection: raise InjectedCrash after the "
+                        "epoch-E boundary checkpoint")
+    g.add_argument("--drop-refresh-at", type=int, nargs="*", default=None,
+                   metavar="E",
+                   help="fault injection: drop epoch E's halo-cache "
+                        "refresh payload (eval serves the stale cache)")
     g.add_argument("--phase0-frac", type=float, default=None,
                    help="hard phase split: fraction of --epochs spent "
                         "generalizing (default: loss-driven trigger; "

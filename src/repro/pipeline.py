@@ -62,6 +62,7 @@ Faithfulness notes:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,7 @@ from .engine import (EngineConfig, make_engine, stack_epoch_batches,
                      stack_pytrees)
 from .graph import (BENCHMARKS, GraphSAGE, NeighborSampler,
                     build_partitioned_graph, make_benchmark)
+from .robustness import FaultPlan, InjectedCrash, RunCheckpointer
 from .train.metrics import F1Report, f1_scores
 from .train.optim import AdamW
 
@@ -137,6 +139,18 @@ class EATConfig:
     async_generalize: bool = False
     # overlap host-side sampling of epoch t+1 with the device step of epoch t
     double_buffer: bool = True
+    # fault tolerance (DESIGN.md §10): checkpoint_dir arms epoch-granular
+    # checkpointing through RunCheckpointer (atomic archives + checksummed
+    # manifest, last keep_checkpoints retained); resume=True restores the
+    # newest valid checkpoint and continues such that final params and val
+    # micro-F1 are bit-for-bit the uninterrupted run's
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1
+    keep_checkpoints: int = 3
+    resume: bool = False
+    # float dtype of the feature/mask path ("float32" | "float64"); float64
+    # needs jax_enable_x64 and is what the fp64 resume-parity oracles run
+    dtype: str = "float32"
 
 
 @dataclass
@@ -187,6 +201,13 @@ class EATResult:
     # device call is inseparable from its eval (epoch_time_s excludes eval
     # wherever eval is a separately-compiled call)
     epoch_time_with_eval_s: float = 0.0
+    # the stacked per-partition params the final test eval ran with — the
+    # bit-for-bit witness the kill-and-resume parity tests compare
+    final_params: Any = None
+    # epoch the run resumed from (-1 = fresh start)
+    resumed_from_epoch: int = -1
+    # total injected straggler delay (max over hosts per epoch, summed)
+    straggler_delay_s: float = 0.0
 
     def summary(self) -> dict:
         return {
@@ -225,6 +246,8 @@ class EATResult:
                 if self.phase0_iter_history else 0.0),
             "host_to_device_mb_phase0": round(
                 self.host_to_device_bytes_phase0 / 1e6, 3),
+            "resumed_from_epoch": self.resumed_from_epoch,
+            "straggler_delay_s": round(self.straggler_delay_s, 3),
         }
 
     def _label(self) -> str:
@@ -252,15 +275,26 @@ class _EpochPrefetcher:
     One worker thread at a time, so the samplers' NumPy RNG streams advance
     in exactly the sequential order — results are identical to the
     unbuffered pipeline, only the wall-clock overlaps.
+
+    ``snapshot`` (optional) is called on the MAIN thread immediately before
+    each speculative draw starts, so ``last_snapshot`` always holds a
+    race-free capture of the sampler RNG states with every draw through the
+    last handed-out epoch consumed — the stream position an epoch-boundary
+    checkpoint must store for a resumed run to re-draw the next epoch
+    identically (DESIGN.md §10).
     """
 
-    def __init__(self, draw):
+    def __init__(self, draw, snapshot=None):
         self._draw = draw
+        self._snapshot = snapshot
         self._pending = None
+        self.last_snapshot = None
 
     def _spawn(self) -> None:
         import threading
 
+        if self._snapshot is not None:
+            self.last_snapshot = self._snapshot()
         box = {}
 
         def work():
@@ -298,12 +332,14 @@ class _EpochPrefetcher:
             self._pending = None
 
 
-def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
+def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
+                    fault_plan: FaultPlan | None = None) -> EATResult:
     if cfg.halo_cache and cfg.full_graph_train:
         raise ValueError(
             "halo_cache is an eval-forward optimisation; full_graph_train "
             "differentiates through the live halo exchange and cannot train "
             "against stale cached embeddings")
+    fdt = np.dtype(cfg.dtype)
     graph = make_benchmark(BENCHMARKS[cfg.dataset])
     n_parts = 1 if cfg.centralized else cfg.num_parts
 
@@ -335,6 +371,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         config=EngineConfig(mode=cfg.engine_mode,
                             use_pallas_agg=cfg.use_pallas_agg,
                             interpret=cfg.interpret,
+                            dtype=fdt,
                             overlap_halo=cfg.overlap_halo,
                             ring_chunks=cfg.ring_chunks,
                             fg_loss="focal" if cfg.use_focal else "ce",
@@ -377,6 +414,8 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
             return int(engine.last_halo_exchange_bytes)
         return model.num_layers * pg.halo_bytes_per_layer
 
+    batch_feats = np.asarray(graph.features, fdt)
+
     def make_batch(nodes: np.ndarray) -> dict:
         # fixed shapes (pad + mask) so batches stack across hosts and the
         # jitted step compiles once — mirrors the static-shape TPU contract
@@ -384,10 +423,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         if k < cfg.batch_size:
             nodes = np.concatenate(
                 [nodes, np.zeros(cfg.batch_size - k, dtype=nodes.dtype)])
-        mask = np.zeros(cfg.batch_size, np.float32)
+        mask = np.zeros(cfg.batch_size, fdt)
         mask[:k] = 1.0
         blocks = neigh.sample(nodes)
-        x_t, x_1, x_2 = blocks.feature_views(graph.features)
+        x_t, x_1, x_2 = blocks.feature_views(batch_feats)
         return {"x_t": jnp.asarray(x_t), "x_1": jnp.asarray(x_1),
                 "x_2": jnp.asarray(x_2),
                 "labels": jnp.asarray(graph.labels[nodes]),
@@ -416,19 +455,40 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     loss_hist: list[float] = []
     val_hist: list[float] = []
 
+    # host sampler RNG discipline for checkpointing: `rng_snapshot` always
+    # holds the generator states with every draw through the last
+    # handed-out epoch consumed — captured on the main thread BEFORE any
+    # speculative prefetch draw, so the double-buffered path checkpoints
+    # the same stream position the unbuffered path would (DESIGN.md §10)
+    def capture_rng() -> dict:
+        return {"cbs": [s._rng.bit_generator.state for s in samplers],
+                "neigh": neigh._rng.bit_generator.state}
+
+    def restore_rng(snap: dict) -> None:
+        for s, st in zip(samplers, snap["cbs"]):
+            s._rng.bit_generator.state = st
+        neigh._rng.bit_generator.state = snap["neigh"]
+
+    rng_snapshot = capture_rng()
+
     # the prefetcher exists only where host sampling does: it is created
     # lazily by the first epoch that draws on the host, so fully-async runs
     # never construct it (the phase-0 host-isolation contract)
     prefetch = None
 
     def next_epoch_batches():
-        nonlocal prefetch
+        nonlocal prefetch, rng_snapshot
         if cfg.double_buffer:
             if prefetch is None:
                 prefetch = _EpochPrefetcher(
-                    lambda: stack_epoch_batches(samplers, make_batch, n_parts))
-            return prefetch.next()
-        return stack_epoch_batches(samplers, make_batch, n_parts)
+                    lambda: stack_epoch_batches(samplers, make_batch, n_parts),
+                    snapshot=capture_rng)
+            out = prefetch.next()
+            rng_snapshot = prefetch.last_snapshot
+            return out
+        out = stack_epoch_batches(samplers, make_batch, n_parts)
+        rng_snapshot = capture_rng()
+        return out
 
     # ONE device sampler serves both async phases (Eq. 3 / uniform logp +
     # fanout structure + features); staged lazily by the first phase that
@@ -470,8 +530,135 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
 
     host_to_device_p0 = 0
     p0_iter_hist: list[int] = []
+    straggler_total = 0.0
+
+    # ---------------- checkpoint/resume (DESIGN.md §10) --------------------
+    ckpt = (RunCheckpointer(cfg.checkpoint_dir,
+                            keep_last=cfg.keep_checkpoints)
+            if cfg.checkpoint_dir else None)
+    fingerprint = {"dataset": cfg.dataset, "num_parts": n_parts,
+                   "method": cfg.partition_method, "seed": cfg.seed,
+                   "dtype": cfg.dtype, "engine": engine.mode,
+                   "halo_cache": cfg.halo_cache}
+
+    def halo_ckpt_state():
+        if cfg.halo_cache and hasattr(engine, "halo_cache_state"):
+            return engine.halo_cache_state()
+        return None
+
+    def make_like(host: dict) -> dict:
+        # reject a foreign checkpoint BEFORE any array I/O: a different
+        # seed/partitioning would otherwise surface as a shape mismatch
+        fp = host.get("fingerprint", {})
+        if fp != fingerprint:
+            raise ValueError(
+                f"checkpoint fingerprint {fp} does not match this run "
+                f"{fingerprint} — refusing to resume")
+        # the arrays template is phase-dependent: personal params exist
+        # only once the phase-1 loop has run at least one epoch
+        like = {"params": params, "opt": opt_state, "best_global": params}
+        if host.get("has_phase1"):
+            pp = broadcast_to_partitions(params, n_parts)
+            like.update(global_params=params, pparams=pp,
+                        popt=jax.vmap(opt.init)(pp), best_personal=pp)
+        st = halo_ckpt_state()
+        if st is not None:
+            like["halo"] = st[0]
+        return like
+
+    restore_phase1 = None
+    resumed_from = -1
+    if ckpt is not None and cfg.resume:
+        loaded = ckpt.load_latest(make_like)
+        if loaded is not None:
+            arrays, host, resumed_from = loaded
+            params, opt_state = arrays["params"], arrays["opt"]
+            best_global = arrays["best_global"]
+            ctrl.load_state_dict(host["controller"])
+            rng_snapshot = host["rng"]
+            restore_rng(rng_snapshot)
+            loss_hist = [float(x) for x in host["loss_hist"]]
+            val_hist = [float(x) for x in host["val_hist"]]
+            sim_time = float(host["sim_time"])
+            epoch_times = [float(x) for x in host["epoch_times"]]
+            epoch_times_with_eval = [float(x)
+                                     for x in host["epoch_times_with_eval"]]
+            comm_grad, comm_halo_p0, comm_halo_p1 = (
+                int(x) for x in host["comm"])
+            halo_exchange_hist = [int(x) for x in host["halo_exchange_hist"]]
+            p0_iter_hist = [int(x) for x in host["p0_iter_hist"]]
+            host_to_device_p0 = int(host["host_to_device_p0"])
+            straggler_total = float(host.get("straggler_s", 0.0))
+            if "halo" in arrays:
+                engine.restore_halo_cache_state(arrays["halo"],
+                                                host["halo_age"])
+            if host.get("has_phase1"):
+                restore_phase1 = (arrays, host)
+            if verbose:
+                print(f"[resume] epoch {resumed_from} phase {ctrl.phase} "
+                      f"from {cfg.checkpoint_dir}")
+
+    phase1_state: dict = {}   # live phase-1 state, for checkpoint capture
+
+    def save_checkpoint() -> None:
+        arrays = {"params": params, "opt": opt_state,
+                  "best_global": best_global}
+        host = {
+            "has_phase1": bool(phase1_state),
+            "controller": ctrl.state_dict(),
+            "rng": rng_snapshot,
+            "loss_hist": loss_hist, "val_hist": val_hist,
+            "sim_time": sim_time,
+            "epoch_times": epoch_times,
+            "epoch_times_with_eval": epoch_times_with_eval,
+            "comm": [int(comm_grad), int(comm_halo_p0), int(comm_halo_p1)],
+            "halo_exchange_hist": [int(x) for x in halo_exchange_hist],
+            "p0_iter_hist": [int(x) for x in p0_iter_hist],
+            "host_to_device_p0": int(host_to_device_p0),
+            "straggler_s": straggler_total,
+            "fingerprint": fingerprint,
+        }
+        st = halo_ckpt_state()
+        if st is not None:
+            arrays["halo"] = jax.tree.map(np.asarray, st[0])
+            host["halo_age"] = int(st[1])
+        if phase1_state:
+            arrays.update(
+                global_params=phase1_state["global_params"],
+                pparams=phase1_state["pparams"],
+                popt=phase1_state["popt"],
+                best_personal=stack_pytrees(phase1_state["best_personal"]))
+            host["host_elapsed"] = [float(x)
+                                    for x in phase1_state["host_elapsed"]]
+            host["phase1_epochs"] = int(phase1_state["phase1_epochs"])
+        ckpt.save(ctrl.epoch, arrays, host)
+
+    def epoch_boundary() -> None:
+        """End of one epoch (ctrl already advanced): persist the boundary,
+        then let any injected crash fire AFTER the state is durable — the
+        only crash point an epoch-granular checkpointer can replay."""
+        if ckpt is not None and ctrl.epoch % max(1, cfg.checkpoint_every) == 0:
+            save_checkpoint()
+        if fault_plan is not None and fault_plan.crash_at(ctrl.epoch):
+            raise InjectedCrash(ctrl.epoch)
+
+    def epoch_faults() -> np.ndarray | None:
+        """Start of one epoch (index ctrl.epoch): arm the dropped-refresh
+        fault, return this epoch's straggler delays (None = none)."""
+        if fault_plan is None:
+            return None
+        if (cfg.halo_cache and fault_plan.drop_halo_refresh(ctrl.epoch)
+                and hasattr(engine, "drop_next_halo_refresh")):
+            engine.drop_next_halo_refresh()
+        d = fault_plan.straggler_delay(ctrl.epoch, n_parts)
+        return d if d.any() else None
+
     draws_at_p0_start = host_draw_count()
-    while not ctrl.done and ctrl.phase == 0:
+    # the no-GP early stop lives in the loop CONDITION (not a body break) so
+    # a run resumed from its stopping boundary also exits before training
+    while (not ctrl.done and ctrl.phase == 0
+           and not (not cfg.use_gp and ctrl.phase0_stopper.stopped)):
+        delay = epoch_faults()
         if cfg.full_graph_train:
             params, opt_state, losses, val_micro, t_dev = (
                 engine.phase0_fullgraph_epoch(params, opt_state,
@@ -507,6 +694,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         comm_grad += grad_bytes_per_sync * n_parts * iters
         p0_iter_hist.append(int(iters))
         host_time = epoch_host_times(t_host, t_dev)
+        if delay is not None:
+            # injected straggler: the synchronous epoch waits for it
+            host_time = host_time + delay
+            straggler_total += float(delay.max())
         sim_time += float(host_time.max())
         epoch_times.append(float(host_time.max()))
         # eval-inclusive epoch period: a separately-compiled eval (host and
@@ -527,8 +718,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                   f"val-micro {mean_val*100:.2f}")
         if cfg.use_gp and ctrl.should_personalize():
             ctrl.start_personalization()
-        elif not cfg.use_gp and ctrl.phase0_stopper.stopped:
-            break
+        epoch_boundary()
 
     if prefetch is not None:
         prefetch.settle()       # quiesce the worker: race-free snapshot
@@ -543,12 +733,24 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
     phase1_epochs = 0
     host_draws_p1 = 0
     if cfg.use_gp and not cfg.centralized:
-        global_params = best_global
-        pparams = broadcast_to_partitions(global_params, n_parts)
-        popt = jax.vmap(opt.init)(pparams)
-        best_personal = [jax.tree.map(lambda x: x[p], pparams)
-                         for p in range(n_parts)]
-        host_elapsed = np.zeros(n_parts)
+        if restore_phase1 is not None:
+            # resumed mid-personalization: restore the phase-1 state the
+            # checkpoint carried instead of re-deriving it from best_global
+            arrays, rhost = restore_phase1
+            global_params = arrays["global_params"]
+            pparams, popt = arrays["pparams"], arrays["popt"]
+            best_personal = [
+                jax.tree.map(lambda x, p=p: x[p], arrays["best_personal"])
+                for p in range(n_parts)]
+            host_elapsed = np.asarray(rhost["host_elapsed"], float)
+            phase1_epochs = int(rhost["phase1_epochs"])
+        else:
+            global_params = best_global
+            pparams = broadcast_to_partitions(global_params, n_parts)
+            popt = jax.vmap(opt.init)(pparams)
+            best_personal = [jax.tree.map(lambda x: x[p], pparams)
+                             for p in range(n_parts)]
+            host_elapsed = np.zeros(n_parts)
 
         if cfg.async_personalize:
             # from here on the mini-epoch path is one device program: join
@@ -569,6 +771,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
 
         while not ctrl.done:
             active_np = ctrl.active_partitions
+            delay = epoch_faults()
+            if delay is not None:
+                host_elapsed += np.where(active_np, delay, 0.0)
+                straggler_total += float(delay.max())
             if cfg.async_personalize:
                 budgets = ctrl.phase1_budgets(dev_sampler.natural_iters)
                 keys = jax.vmap(jax.random.fold_in, (0, None))(
@@ -603,6 +809,11 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
                       f"val-micro {scores.mean()*100:.2f} "
                       f"active {int(active_np.sum())}/{n_parts} "
                       f"budgets {np.asarray(budgets).tolist()}")
+            phase1_state.update(
+                global_params=global_params, pparams=pparams, popt=popt,
+                best_personal=best_personal, host_elapsed=host_elapsed,
+                phase1_epochs=phase1_epochs)
+            epoch_boundary()
         # async phase: distributed time = slowest host's own cumulative time
         if prefetch is not None:
             prefetch.close()        # settle in-flight draws before counting
@@ -653,4 +864,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False) -> EATResult:
         host_draws_phase0=host_draws_p0,
         phase0_iter_history=p0_iter_hist,
         host_to_device_bytes_phase0=host_to_device_p0,
+        final_params=final_stacked,
+        resumed_from_epoch=resumed_from,
+        straggler_delay_s=straggler_total,
     )

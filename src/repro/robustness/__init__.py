@@ -1,0 +1,7 @@
+"""Fault tolerance: deterministic fault injection, epoch-granular
+checkpoint/resume, serving degradation support (DESIGN.md §10)."""
+from .checkpoint import RunCheckpointer
+from .faults import FaultPlan, InjectedCrash, flip_bit, truncate_file
+
+__all__ = ["FaultPlan", "InjectedCrash", "RunCheckpointer", "flip_bit",
+           "truncate_file"]

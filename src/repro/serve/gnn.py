@@ -164,7 +164,30 @@ class GNNServingEngine:
         self._edge_seeds: list[set[int]] = [set() for _ in range(P)]
         self._pending: list[int] = []
         self.stats = {"ticks": 0, "flushes": 0, "rows_recomputed": 0,
-                      "gather_calls": 0, "queries": 0, "halo_rows_grown": 0}
+                      "gather_calls": 0, "queries": 0, "halo_rows_grown": 0,
+                      "updates_queued": 0, "replay_attempts": 0,
+                      "replayed": 0, "degraded_queries": 0,
+                      "failovers": 0, "recoveries": 0}
+
+        # ---- per-partition health state machine (DESIGN.md §10) ----------
+        # healthy -> failed (fail_partition / an injected serve fault) ->
+        # healthy (recover_partition).  While a partition is failed its
+        # stored embeddings stay FROZEN-CONSISTENT: any update whose
+        # propagation cone would touch it is queued in arrival order and
+        # applied NOWHERE, so reads of the failed store remain exactly the
+        # last flushed state; queries it owns are answered from that state
+        # with a per-answer staleness tag.  Queue replay is retried with
+        # bounded exponential backoff and drains FIFO on recovery.
+        self.health: list[str] = ["healthy"] * P
+        self._failed_since: list[int] = [0] * P
+        self._tick_no = 0
+        self._queue: list[tuple] = []
+        self._queued_feat: set[int] = set()
+        self._queued_edges: set[tuple[int, int]] = set()
+        self.max_backoff = 8          # backoff cap, in ticks
+        self._backoff = 1
+        self._retry_next = 0
+        self.fault_plan = None
 
     # ------------------------------------------------------------- updates
     def _local(self, p: int, gid: int) -> int:
@@ -189,8 +212,16 @@ class GNNServingEngine:
         return row
 
     def update_features(self, gid: int, vec: np.ndarray) -> None:
-        """Overwrite one node's input features (owner + every halo copy)."""
+        """Overwrite one node's input features (owner + every halo copy).
+        While any partition in the update's propagation cone is failed the
+        update is queued whole (applied nowhere) and replays on recovery."""
         gid = int(gid)
+        if self._should_queue_feat(gid):
+            self._queue.append(("feat", gid,
+                                np.array(vec, self.dtype, copy=True)))
+            self._queued_feat.add(gid)
+            self.stats["updates_queued"] += 1
+            return
         p = int(self.owner_part[gid])
         row = int(self.owner_row[gid])
         vec = np.asarray(vec, self.dtype)
@@ -205,6 +236,11 @@ class GNNServingEngine:
         Returns False if it already exists.  Growing a previously unseen
         cross-partition source appends a halo row on v's partition."""
         u, v = int(u), int(v)
+        if self._should_queue_edge(u, v, adding=True):
+            self._queue.append(("add", u, v))
+            self._queued_edges.add((u, v))
+            self.stats["updates_queued"] += 1
+            return True
         p = int(self.owner_part[v])
         vrow = int(self.owner_row[v])
         pos = int(np.searchsorted(self.nbr_gid[p][vrow], u))
@@ -223,6 +259,11 @@ class GNNServingEngine:
         planner's adjacency keeps the stale out-edge (over-propagation is
         always safe); only the aggregation list shrinks."""
         u, v = int(u), int(v)
+        if self._should_queue_edge(u, v, adding=False):
+            self._queue.append(("remove", u, v))
+            self._queued_edges.add((u, v))
+            self.stats["updates_queued"] += 1
+            return True
         p = int(self.owner_part[v])
         vrow = int(self.owner_row[v])
         pos = int(np.searchsorted(self.nbr_gid[p][vrow], u))
@@ -307,19 +348,158 @@ class GNNServingEngine:
     def refresh_full(self) -> dict:
         """From-scratch rematerialization through the same flush machinery
         (every owned row dirty) — the baseline :meth:`flush` must beat."""
+        if self._any_failed():
+            raise RuntimeError(
+                "refresh_full requires every partition healthy; failed: "
+                f"{[p for p, h in enumerate(self.health) if h != 'healthy']}")
         for p in range(self.num_parts):
             self._dirty0[p].update(range(int(self.n_own[p])))
         return self.flush()
+
+    # ------------------------------------- health machine / degraded mode
+    def _any_failed(self) -> bool:
+        return any(h != "healthy" for h in self.health)
+
+    def set_fault_plan(self, plan) -> None:
+        """Attach a :class:`~repro.robustness.FaultPlan`; its serve fail /
+        recover events are applied at the start of each :meth:`tick`."""
+        self.fault_plan = plan
+
+    def fail_partition(self, p: int) -> None:
+        """Mark partition ``p`` failed at the current tick boundary.
+
+        Pending dirty work is flushed FIRST (the failure lands on a flush
+        boundary), so the failed store freezes in a fully consistent
+        state; from here on any update whose cone touches ``p`` queues."""
+        p = int(p)
+        if self.health[p] != "healthy":
+            return
+        self.flush()
+        self.health[p] = "failed"
+        self._failed_since[p] = self._tick_no
+        self.stats["failovers"] += 1
+
+    def recover_partition(self, p: int) -> None:
+        """Mark partition ``p`` healthy again; the queued updates replay
+        (FIFO, all-or-nothing) at the next :meth:`tick`'s drain."""
+        p = int(p)
+        if self.health[p] != "failed":
+            return
+        self.health[p] = "healthy"
+        self._backoff = 1
+        self._retry_next = self._tick_no
+        self.stats["recoveries"] += 1
+
+    def _probe_touches_failed(self, seeds_h0: dict, seeds_edge: dict) -> bool:
+        """Would an update with these dirty seeds propagate into a failed
+        partition?  Runs the planner's cone (the exact sets flush would
+        recompute + the replica pushes between layers) over the probe."""
+        failed = {p for p, h in enumerate(self.health) if h != "healthy"}
+        if not failed:
+            return False
+        P = self.num_parts
+        for p in failed:
+            if seeds_h0.get(p) or seeds_edge.get(p):
+                return True
+        plans = self.planner.propagate(
+            {p: np.fromiter(sorted(seeds_h0.get(p, ())), np.int64,
+                            len(seeds_h0.get(p, ()))) for p in range(P)},
+            {p: np.fromiter(sorted(seeds_edge.get(p, ())), np.int64,
+                            len(seeds_edge.get(p, ()))) for p in range(P)},
+            self.L)
+        for l, rec in enumerate(plans, start=1):
+            for p in range(P):
+                if p in failed and rec[p].size:
+                    return True
+                if l < self.L and rec[p].size:
+                    for q, _qrow, _r in self.planner.replicas(p, rec[p]):
+                        if q in failed:
+                            return True
+        return False
+
+    def _should_queue_feat(self, gid: int) -> bool:
+        if not self._queue and not self._any_failed():
+            return False
+        if gid in self._queued_feat:
+            return True            # FIFO order behind the queued write
+        if not self._any_failed():
+            return False
+        p = int(self.owner_part[gid])
+        row = int(self.owner_row[gid])
+        if self.health[p] != "healthy":
+            return True
+        seeds = {p: {row}}
+        for q, qrow, _ in self.planner.replicas(p, np.asarray([row])):
+            if self.health[q] != "healthy":
+                return True        # h0 mirror would write into q
+            seeds.setdefault(q, set()).add(qrow)
+        return self._probe_touches_failed(seeds, {})
+
+    def _should_queue_edge(self, u: int, v: int, *, adding: bool) -> bool:
+        if not self._queue and not self._any_failed():
+            return False
+        if (u, v) in self._queued_edges:
+            return True            # FIFO order behind the queued edge op
+        if not self._any_failed():
+            return False
+        p = int(self.owner_part[v])
+        if self.health[p] != "healthy":
+            return True
+        if adding and self.health[int(self.owner_part[u])] != "healthy":
+            return True            # halo grow would subscribe to a dead host
+        return self._probe_touches_failed({}, {p: {int(self.owner_row[v])}})
+
+    def _drain_queue(self) -> None:
+        """Replay the queued updates FIFO once every partition is healthy;
+        while one is still failed, retry with bounded exponential backoff
+        (1, 2, 4, ... capped at ``max_backoff`` ticks)."""
+        if not self._queue:
+            self._backoff = 1
+            self._retry_next = 0
+            return
+        if self._tick_no < self._retry_next:
+            return
+        self.stats["replay_attempts"] += 1
+        if self._any_failed():
+            self._backoff = min(self._backoff * 2, self.max_backoff)
+            self._retry_next = self._tick_no + self._backoff
+            return
+        ops, self._queue = self._queue, []
+        self._queued_feat.clear()
+        self._queued_edges.clear()
+        for op in ops:
+            if op[0] == "feat":
+                self.update_features(op[1], op[2])
+            elif op[0] == "add":
+                self.add_edge(op[1], op[2])
+            else:
+                self.remove_edge(op[1], op[2])
+        self.stats["replayed"] += len(ops)
+        self._backoff = 1
+        self._retry_next = 0
 
     # ------------------------------------------------------------- queries
     def submit(self, gids) -> None:
         self._pending.extend(int(g) for g in np.atleast_1d(np.asarray(gids)))
 
     def tick(self) -> tuple[dict, dict]:
-        """One serving tick: flush pending updates, then answer every queued
-        query with one fused gather per owning partition."""
+        """One serving tick: apply scheduled fault events, attempt a queue
+        drain, flush pending updates, then answer every queued query with
+        one fused gather per owning partition.  Queries owned by a failed
+        partition are answered from its frozen (last-flushed) logits and
+        tagged in ``flush_stats['staleness']`` with the number of ticks
+        since that partition failed."""
+        self._tick_no += 1
+        if self.fault_plan is not None:
+            for kind, p in self.fault_plan.serve_events(self._tick_no):
+                if kind == "fail":
+                    self.fail_partition(p)
+                else:
+                    self.recover_partition(p)
+        self._drain_queue()
         flush_stats = self.flush()
         results: dict[int, np.ndarray] = {}
+        staleness: dict[int, int] = {}
         by_part: dict[int, list[int]] = {}
         for gid in self._pending:
             by_part.setdefault(int(self.owner_part[gid]), []).append(gid)
@@ -331,11 +511,20 @@ class GNNServingEngine:
             out = np.asarray(_gather(jnp.asarray(self.h[self.L][p]),
                                      jnp.asarray(rp)))[: len(rows)]
             self.stats["gather_calls"] += 1
+            degraded = self.health[p] != "healthy"
+            age = self._tick_no - self._failed_since[p] if degraded else 0
             for g, logit_row in zip(gids, out):
                 results[g] = logit_row
+                if degraded:
+                    staleness[g] = age
+            if degraded:
+                self.stats["degraded_queries"] += len(gids)
         self.stats["queries"] += len(self._pending)
         self.stats["ticks"] += 1
         self._pending.clear()
+        flush_stats["staleness"] = staleness
+        flush_stats["queued_updates"] = len(self._queue)
+        flush_stats["health"] = list(self.health)
         return results, flush_stats
 
     def query(self, gids) -> np.ndarray:

@@ -1,18 +1,60 @@
 """Checkpointing: pytree <-> npz with path-keyed entries (+ best-model
-bookkeeping for the GP phases: one global W^G, one W^P per partition)."""
+bookkeeping for the GP phases: one global W^G, one W^P per partition).
+
+Durability contract (DESIGN.md §10):
+
+  · **Atomic writes.**  ``save_pytree`` writes the npz to a tmp file in the
+    target directory and publishes it with ``os.replace`` — a reader never
+    observes a half-written archive, a crash mid-save leaves the previous
+    checkpoint intact.  The sidecar ``<name>.npz.meta.json`` is written the
+    same way, AFTER the arrays, so meta/array mismatch is detectable (CRC)
+    rather than silent.
+  · **Per-entry CRC.**  meta.json carries a crc32 per flattened entry;
+    ``load_pytree`` verifies every entry it restores.  A truncated or
+    bit-flipped file raises :class:`CheckpointCorruptError` NAMING the
+    offending entry key — not a raw numpy zipfile traceback.
+  · **Key diagnosis.**  A checkpoint whose entries don't match the ``like``
+    template raises :class:`CheckpointKeyError` reporting the FULL missing
+    and unexpected key sets in one message, so partial/foreign checkpoints
+    are diagnosable at a glance.
+  · **Dtype fidelity.**  bfloat16 leaves are widened to float32 on save
+    (npz cannot round-trip ml_dtypes) and cast back on load — the round
+    trip restores the exact bf16 payload.  A NumPy template leaf restores
+    to a NumPy array of the template dtype (no silent f64→f32 downcast
+    through jnp under x64-off), a JAX template leaf to a jnp array.
+"""
 from __future__ import annotations
 
 import json
 import os
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager",
+           "CheckpointCorruptError", "CheckpointKeyError"]
 
 _SEP = "::"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file is unreadable or fails its integrity check."""
+
+
+class CheckpointKeyError(RuntimeError):
+    """Checkpoint entries do not match the restore template."""
+
+
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _meta_path(path: str) -> str:
+    return _npz_path(path) + ".meta.json"
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -28,26 +70,98 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return out
 
 
+def _atomic_write(path: str, write_fn) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def save_pytree(path: str, tree: Any, meta: dict | None = None) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    """Atomically persist ``tree``: tmp + ``os.replace`` for the npz, then
+    the meta sidecar (caller meta under ``"meta"``, per-entry crc32 under
+    ``"crc32"``)."""
+    final = _npz_path(path)
+    os.makedirs(os.path.dirname(final) or ".", exist_ok=True)
     entries = _flatten(tree)
-    np.savez(path, **entries)
-    if meta is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(meta, f, indent=2)
+    crcs = {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+            for k, v in entries.items()}
+    _atomic_write(final, lambda f: np.savez(f, **entries))
+    doc = json.dumps({"crc32": crcs, "meta": meta or {}}, indent=2)
+    _atomic_write(_meta_path(path), lambda f: f.write(doc.encode()))
+
+
+def load_meta(path: str) -> dict:
+    """The caller-supplied meta dict saved alongside ``path`` ({} if none)."""
+    mp = _meta_path(path)
+    if not os.path.exists(mp):
+        return {}
+    with open(mp) as f:
+        doc = json.load(f)
+    # pre-PR-8 checkpoints stored the user meta at top level
+    return doc.get("meta", doc) if isinstance(doc, dict) else {}
+
+
+def _load_crcs(path: str) -> dict[str, int]:
+    mp = _meta_path(path)
+    if not os.path.exists(mp):
+        return {}
+    try:
+        with open(mp) as f:
+            doc = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptError(f"{mp}: unreadable meta sidecar ({e})")
+    return doc.get("crc32", {}) if isinstance(doc, dict) else {}
 
 
 def load_pytree(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype template)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like`` (shape/dtype template).
+
+    Raises :class:`CheckpointCorruptError` naming the offending entry on a
+    truncated/bit-flipped archive or a CRC mismatch, and
+    :class:`CheckpointKeyError` listing the full missing/unexpected key
+    sets when the checkpoint doesn't match the template.
+    """
+    final = _npz_path(path)
+    try:
+        data = np.load(final)
+        available = set(data.files)
+    except (zipfile.BadZipFile, OSError, ValueError, EOFError, KeyError) as e:
+        raise CheckpointCorruptError(f"{final}: unreadable archive ({e})")
+    crcs = _load_crcs(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+            for p, _ in flat]
+    missing = sorted(set(keys) - available)
+    unexpected = sorted(available - set(keys))
+    if missing or unexpected:
+        raise CheckpointKeyError(
+            f"{final}: entries do not match template — "
+            f"missing {missing or '[]'}, unexpected {unexpected or '[]'}")
     leaves = []
-    for p, leaf in flat:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
-        arr = data[key]
+    for key, (p, leaf) in zip(keys, flat):
+        try:
+            arr = data[key]
+        except (zipfile.BadZipFile, zlib.error, OSError, ValueError,
+                EOFError) as e:
+            raise CheckpointCorruptError(
+                f"{final}: entry '{key}' is corrupt ({e})")
+        if key in crcs and zlib.crc32(
+                np.ascontiguousarray(arr).tobytes()) != crcs[key]:
+            raise CheckpointCorruptError(
+                f"{final}: entry '{key}' failed its crc32 integrity check")
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
-        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        if isinstance(leaf, np.ndarray):
+            leaves.append(arr.astype(leaf.dtype, copy=False))
+        else:
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -57,23 +171,52 @@ class CheckpointManager:
     Phase-0 keeps the best GLOBAL model (avg val micro-F1); phase-1 keeps the
     best PERSONAL model per partition (its own val micro-F1) — 'the best
     model is saved' per the paper, independently for each phase/host.
+    ``update_*`` persist only on a strict score improvement and return
+    whether they saved; ``save_*`` persist unconditionally.
     """
 
     def __init__(self, directory: str):
         self.dir = directory
         os.makedirs(directory, exist_ok=True)
 
+    def _global_path(self) -> str:
+        return os.path.join(self.dir, "global_best.npz")
+
+    def _personal_path(self, partition: int) -> str:
+        return os.path.join(self.dir, f"personal_{partition}_best.npz")
+
     def save_global(self, params: Any, epoch: int, score: float) -> None:
-        save_pytree(os.path.join(self.dir, "global_best.npz"), params,
+        save_pytree(self._global_path(), params,
                     meta={"epoch": epoch, "score": score, "phase": 0})
 
     def save_personal(self, partition: int, params: Any, epoch: int, score: float) -> None:
-        save_pytree(os.path.join(self.dir, f"personal_{partition}_best.npz"), params,
+        save_pytree(self._personal_path(partition), params,
                     meta={"epoch": epoch, "score": score, "phase": 1,
                           "partition": partition})
 
+    def global_meta(self) -> dict:
+        return load_meta(self._global_path())
+
+    def personal_meta(self, partition: int) -> dict:
+        return load_meta(self._personal_path(partition))
+
+    def update_global(self, params: Any, epoch: int, score: float) -> bool:
+        prev = self.global_meta().get("score")
+        if prev is not None and score <= prev:
+            return False
+        self.save_global(params, epoch, score)
+        return True
+
+    def update_personal(self, partition: int, params: Any, epoch: int,
+                        score: float) -> bool:
+        prev = self.personal_meta(partition).get("score")
+        if prev is not None and score <= prev:
+            return False
+        self.save_personal(partition, params, epoch, score)
+        return True
+
     def load_global(self, like: Any) -> Any:
-        return load_pytree(os.path.join(self.dir, "global_best.npz"), like)
+        return load_pytree(self._global_path(), like)
 
     def load_personal(self, partition: int, like: Any) -> Any:
-        return load_pytree(os.path.join(self.dir, f"personal_{partition}_best.npz"), like)
+        return load_pytree(self._personal_path(partition), like)

@@ -80,3 +80,72 @@ def test_checkpoint_shape_mismatch_raises(tmp_path):
     save_pytree(path, {"w": jnp.ones(3)})
     with pytest.raises(ValueError, match="shape mismatch"):
         load_pytree(path, {"w": jnp.zeros(4)})
+
+
+def test_checkpoint_manager_best_model_bookkeeping(tmp_path):
+    """update_global / update_personal persist only on strict improvement
+    and report what they did; the stored payload is always the best seen."""
+    mgr = CheckpointManager(str(tmp_path))
+    like = {"w": jnp.zeros((2, 2))}
+
+    assert mgr.update_global({"w": jnp.full((2, 2), 1.0)}, epoch=0,
+                             score=0.5) is True
+    assert mgr.update_global({"w": jnp.full((2, 2), 2.0)}, epoch=1,
+                             score=0.5) is False        # ties don't replace
+    assert mgr.update_global({"w": jnp.full((2, 2), 3.0)}, epoch=2,
+                             score=0.4) is False        # worse doesn't either
+    assert float(mgr.load_global(like)["w"][0, 0]) == 1.0
+    meta = mgr.global_meta()
+    assert meta["epoch"] == 0 and meta["score"] == 0.5
+    assert mgr.update_global({"w": jnp.full((2, 2), 4.0)}, epoch=3,
+                             score=0.6) is True
+    assert float(mgr.load_global(like)["w"][0, 0]) == 4.0
+    assert mgr.global_meta() == {"epoch": 3, "score": 0.6, "phase": 0}
+
+    # personal tracks are independent per partition
+    assert mgr.update_personal(0, {"w": jnp.full((2, 2), 7.0)}, epoch=4,
+                               score=0.3) is True
+    assert mgr.update_personal(1, {"w": jnp.full((2, 2), 8.0)}, epoch=4,
+                               score=0.2) is True
+    assert mgr.update_personal(0, {"w": jnp.full((2, 2), 9.0)}, epoch=5,
+                               score=0.25) is False
+    assert float(mgr.load_personal(0, like)["w"][0, 0]) == 7.0
+    assert float(mgr.load_personal(1, like)["w"][0, 0]) == 8.0
+    assert mgr.personal_meta(0)["score"] == 0.3
+
+
+def test_checkpoint_fp64_bitwise_roundtrip(tmp_path):
+    """fp64 payloads survive save/load with no widening or quantization:
+    the raw 64-bit patterns are identical (numpy templates exercise the
+    numpy-passthrough branch of load_pytree)."""
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.standard_normal((16, 8)),          # float64
+            "tiny": np.nextafter(np.zeros(4), 1.0),     # denormals
+            "odd": np.array([np.pi, -0.0, np.inf, 1e-308])}
+    path = os.path.join(tmp_path, "f64.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path, {k: np.zeros_like(v) for k, v in tree.items()})
+    for k in tree:
+        assert back[k].dtype == np.float64
+        np.testing.assert_array_equal(
+            tree[k].view(np.uint64), np.asarray(back[k]).view(np.uint64))
+
+
+def test_checkpoint_bf16_exact_payload(tmp_path):
+    """bf16 is widened to f32 in the archive (npz has no bf16) and cast
+    back on load; the round trip restores the EXACT 16-bit payload."""
+    bits = np.arange(0, 1 << 16, 7, dtype=np.uint16)    # sweep bit patterns
+    vals = jax.lax.bitcast_convert_type(jnp.asarray(bits),
+                                        jnp.bfloat16)
+    finite = np.isfinite(np.asarray(vals, np.float32))
+    vals = jnp.where(jnp.asarray(finite), vals, jnp.bfloat16(0))
+    tree = {"b": vals}
+    path = os.path.join(tmp_path, "bf16.npz")
+    save_pytree(path, tree)
+    back = load_pytree(path, {"b": jnp.zeros_like(vals)})
+    assert back["b"].dtype == jnp.bfloat16
+    orig_bits = np.asarray(
+        jax.lax.bitcast_convert_type(vals, jnp.uint16))
+    back_bits = np.asarray(
+        jax.lax.bitcast_convert_type(back["b"], jnp.uint16))
+    np.testing.assert_array_equal(orig_bits, back_bits)
