@@ -24,6 +24,12 @@
 #                          plus one degraded serving tick (frozen-store
 #                          answer + staleness tag + queued replay); runs
 #                          outside the 30 s gate
+#   scripts/ci.sh comm     compressed-communication smoke only: one tiny
+#                          int8-halo + bucketed-gradient epoch pair in BOTH
+#                          engine modes (stacked and forced-4-device spmd);
+#                          the gradient wire bytes must be exactly half the
+#                          uncompressed run's and the halo exchange bytes
+#                          under half; runs outside the 30 s gate
 #   scripts/ci.sh timing   the timing quarantine lane only: wall-clock-
 #                          sensitive tests, one automatic retry, never part
 #                          of the 30 s runtime gate
@@ -298,10 +304,55 @@ if [ "$mode" = "faults" ]; then
     exit 0
 fi
 
+# ---- compressed-communication smoke ----------------------------------------
+# Fifth fail-fast witness: the PR-9 compression layer.  One tiny run with
+# int8 halo quantization + bucketed gradient reduction in each engine mode
+# (stacked, and shard_map on 4 forced host devices) against an uncompressed
+# baseline: the accounted gradient wire bytes must be EXACTLY 2/P of the
+# all_gather spelling (0.5 at P=4), the eval halo exchange bytes under half,
+# and the compressed micro-F1 in the baseline's neighbourhood.  Not a pytest
+# test, so it sits outside the 30 s runtime gate by construction; the fp64
+# bitwise oracle tier runs in tests/test_engine_parity.py.
+comm_smoke() {
+    python - <<'PY'
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import numpy as np
+from repro.pipeline import EATConfig, run_eat_distgnn
+
+KW = dict(dataset="tiny", num_parts=4, batch_size=32, hidden_dim=16,
+          fanouts=(3, 3), max_epochs=2, phase0_fraction=1.0, seed=3)
+base = run_eat_distgnn(EATConfig(**KW, engine_mode="stacked"))
+assert base.comm_grad_bytes > 0 and base.comm_halo_exchange_bytes > 0
+micros = {}
+for mode in ("stacked", "spmd"):
+    res = run_eat_distgnn(EATConfig(**KW, engine_mode=mode,
+                                    halo_compress="int8",
+                                    grad_compress="bucketed"))
+    g_ratio = res.comm_grad_bytes / base.comm_grad_bytes
+    h_ratio = res.comm_halo_exchange_bytes / base.comm_halo_exchange_bytes
+    assert g_ratio == 0.5, (mode, g_ratio)          # 2*(P-1) / (P*(P-1))
+    assert h_ratio <= 0.5, (mode, h_ratio)          # (d+4) / 4d at f32
+    assert np.isfinite(res.f1.micro)
+    micros[mode] = res.f1.micro
+assert abs(micros["stacked"] - micros["spmd"]) < 1.0, micros
+print(f"comm smoke OK (grad bytes 0.5x, halo bytes <=0.5x, micro "
+      f"{micros['stacked']:.2f}/{micros['spmd']:.2f} vs base "
+      f"{base.f1.micro:.2f})")
+PY
+}
+
+if [ "$mode" = "comm" ]; then
+    comm_smoke || exit 1
+    exit 0
+fi
+
 grad_smoke || { echo "REGRESSION: grad-parity smoke failed"; exit 1; }
 halo_cache_smoke || { echo "REGRESSION: halo-cache smoke failed"; exit 1; }
 serve_smoke || { echo "REGRESSION: serving smoke failed"; exit 1; }
 faults_smoke || { echo "REGRESSION: faults smoke failed"; exit 1; }
+comm_smoke || { echo "REGRESSION: compressed-communication smoke failed"; exit 1; }
 
 out=$(python -m pytest -m "not slow and not timing" -q --durations=0 2>&1)
 pytest_status=$?

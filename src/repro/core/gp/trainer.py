@@ -29,11 +29,18 @@ from ...train.optim import OptState, apply_updates
 
 __all__ = [
     "GPHyperParams",
+    "GRAD_COMPRESS_MODES",
     "make_generalize_step",
     "make_fullgraph_loss_fn",
     "make_personalize_partition_step",
     "make_personalize_step",
     "broadcast_to_partitions",
+    "grad_topk_size",
+    "grad_sync_wire_bytes",
+    "make_bucketed_reduce_stacked",
+    "make_bucketed_reduce_shard",
+    "make_topk_reduce_stacked",
+    "make_topk_reduce_shard",
 ]
 
 PyTree = Any
@@ -97,6 +104,158 @@ def make_fullgraph_loss_fn(fwd: Callable, loss: str = "ce",
                                   mask=batch["train_mask"])
 
     return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# compressed phase-0 gradient reduction (DESIGN.md §11)
+#
+# Two spellings of the cross-partition gradient mean behind the same engine
+# surface.  Every builder comes in a STACKED form (operates on (P, ...)
+# gradients outside any collective context — the single-device engine mode
+# and the sequential oracle's jitted apply) and a SHARD form (per-shard
+# gradients inside vmap(axis_name=...) or shard_map, using real
+# collectives).  The stacked and shard forms compute bitwise-identical
+# results: the shard top-k spells its reduction all_gather + stack-axis
+# sum — pure data movement followed by the oracle's exact deterministic
+# reduction — and the bucketed psum's platform reduction matches the
+# stack-sum bit-for-bit (the same property the engine's existing pmean
+# parity tests lock).
+# ---------------------------------------------------------------------------
+
+GRAD_COMPRESS_MODES = ("none", "bucketed", "topk")
+
+
+def grad_topk_size(param_count: int, frac: float) -> int:
+    """Entries each partition ships per top-k sync (>= 1, <= param_count)."""
+    return max(1, min(int(param_count), int(param_count * frac)))
+
+
+def grad_sync_wire_bytes(mode: str, num_parts: int, param_count: int,
+                         itemsize: int = 4, topk_frac: float = 0.01) -> int:
+    """Bytes ONE phase-0 gradient synchronisation puts on the wire, summed
+    over every partition (the per-step cost the pipeline accounts):
+
+      none      the all_gather spelling ships each partition's full gradient
+                to every peer: ``P * (P-1) * B``.
+      bucketed  ring all-reduce (reduce-scatter + all-gather over static
+                buckets): each rank moves ``2 * (P-1)/P * B``, fleet total
+                ``2 * (P-1) * B`` — ``2/P`` of the all_gather spelling.
+      topk      each partition all_gathers only its k largest entries as
+                (value, int32 index) pairs: ``P * (P-1) * k * (itemsize+4)``.
+
+    ``B = param_count * itemsize`` derives from the PAYLOAD dtype's itemsize
+    (no hardcoded fp32 assumption).
+    """
+    P = int(num_parts)
+    if P <= 1:
+        return 0
+    B = int(param_count) * int(itemsize)
+    if mode == "none":
+        return P * (P - 1) * B
+    if mode == "bucketed":
+        return 2 * (P - 1) * B
+    if mode == "topk":
+        k = grad_topk_size(param_count, topk_frac)
+        return P * (P - 1) * k * (int(itemsize) + 4)
+    raise ValueError(f"unknown grad compression mode {mode!r} "
+                     f"(expected one of {GRAD_COMPRESS_MODES})")
+
+
+def _flat_stacked(grads_stacked):
+    """(P, ...) gradient pytree -> ((P, N) flat matrix, unravel for one
+    partition's pytree)."""
+    from jax.flatten_util import ravel_pytree
+
+    g0 = jax.tree.map(lambda g: g[0], grads_stacked)
+    _, unravel = ravel_pytree(g0)
+    flat = jax.vmap(lambda g: ravel_pytree(g)[0])(grads_stacked)
+    return flat, unravel
+
+
+def _bucket_slices(n: int, bucket_bytes: int, itemsize: int):
+    be = max(1, int(bucket_bytes) // max(1, int(itemsize)))
+    return [(lo, min(lo + be, n)) for lo in range(0, n, be)]
+
+
+def make_bucketed_reduce_stacked(num_parts: int, bucket_bytes: int):
+    """Bucketed mean over stacked (P, ...) gradients.  Elementwise this IS
+    the plain ``sum(axis=0) / P`` (bucketing a per-element reduction changes
+    nothing), so the stacked bucketed mode stays bitwise with mode none —
+    the property that lets one oracle serve both spellings."""
+
+    def reduce(grads_stacked):
+        flat, unravel = _flat_stacked(grads_stacked)
+        chunks = [jnp.sum(flat[:, lo:hi], axis=0)
+                  for lo, hi in _bucket_slices(flat.shape[1], bucket_bytes,
+                                               flat.dtype.itemsize)]
+        total = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+        return unravel(total / num_parts)
+
+    return reduce
+
+
+def make_bucketed_reduce_shard(num_parts: int, axis_name: str,
+                               bucket_bytes: int):
+    """Per-shard bucketed all-reduce: ravel once, one ``psum`` per static
+    bucket slice (the ring-all-reduce spelling XLA can schedule bucket by
+    bucket), divide, unravel."""
+    from jax.flatten_util import ravel_pytree
+
+    def reduce(grads):
+        flat, unravel = ravel_pytree(grads)
+        chunks = [jax.lax.psum(flat[lo:hi], axis_name)
+                  for lo, hi in _bucket_slices(flat.shape[0], bucket_bytes,
+                                               flat.dtype.itemsize)]
+        total = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+        return unravel(total / num_parts)
+
+    return reduce
+
+
+def _topk_sent(g_ef, k: int):
+    """Keep the k largest-|.| entries of a flat vector, zero elsewhere."""
+    _, idx = jax.lax.top_k(jnp.abs(g_ef), k)
+    return jnp.zeros_like(g_ef).at[idx].set(g_ef[idx])
+
+
+def make_topk_reduce_stacked(num_parts: int, topk_frac: float):
+    """Top-k sparsified mean with error feedback over stacked (P, ...)
+    gradients.  ``residual`` is the carried (P, N) per-partition
+    quantization error; returns ``(mean grads pytree, new residual)``.
+    k is static (from the flat length at trace time) and ``lax.top_k`` is
+    deterministic, so the compressed step is bit-reproducible."""
+
+    def reduce(grads_stacked, residual):
+        flat, unravel = _flat_stacked(grads_stacked)
+        k = grad_topk_size(flat.shape[1], topk_frac)
+        g_ef = flat + residual.astype(flat.dtype)
+        sent = jax.vmap(lambda v: _topk_sent(v, k))(g_ef)
+        new_res = (g_ef - sent).astype(residual.dtype)
+        total = jnp.sum(sent, axis=0) / num_parts
+        return unravel(total), new_res
+
+    return reduce
+
+
+def make_topk_reduce_shard(num_parts: int, axis_name: str, topk_frac: float):
+    """Per-shard top-k reduce: each partition ships only its k
+    error-compensated largest entries; the reduction is spelled
+    ``all_gather`` + stack-axis sum so the result is bitwise the stacked /
+    sequential reduction.  ``residual`` is this partition's (N,) error
+    state; returns ``(mean grads pytree, new residual)``."""
+    from jax.flatten_util import ravel_pytree
+
+    def reduce(grads, residual):
+        flat, unravel = ravel_pytree(grads)
+        k = grad_topk_size(flat.shape[0], topk_frac)
+        g_ef = flat + residual.astype(flat.dtype)
+        sent = _topk_sent(g_ef, k)
+        new_res = (g_ef - sent).astype(residual.dtype)
+        all_sent = jax.lax.all_gather(sent, axis_name)      # (P, N)
+        total = jnp.sum(all_sent, axis=0) / num_parts
+        return unravel(total), new_res
+
+    return reduce
 
 
 def make_personalize_partition_step(

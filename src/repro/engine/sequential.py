@@ -17,9 +17,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.gp.trainer import GPHyperParams, make_personalize_partition_step
-from ..graph.distributed import (PartitionedGraph, halo_refresh_plan,
-                                 make_ref_mean_agg, make_ref_split_agg)
+from ..core.gp.trainer import (GPHyperParams, GRAD_COMPRESS_MODES,
+                               make_bucketed_reduce_stacked,
+                               make_personalize_partition_step,
+                               make_topk_reduce_stacked)
+from ..graph.distributed import (HALO_COMPRESS_MODES, PartitionedGraph,
+                                 dequantize_rows, halo_refresh_plan,
+                                 make_ref_mean_agg, make_ref_split_agg,
+                                 quantize_rows, wire_row_bytes)
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 
@@ -44,6 +49,22 @@ class SequentialReference:
         self.own_cap = pg.own_cap
         self.overlap = bool(getattr(config, "overlap_halo", False))
         self._fg_loss_kind = getattr(config, "fg_loss", "ce")
+        # compressed communication (DESIGN.md §11), mirrored from the engine
+        self.halo_compress = str(getattr(config, "halo_compress", "none"))
+        self.grad_compress = str(getattr(config, "grad_compress", "none"))
+        self._grad_topk_frac = float(getattr(config, "grad_topk_frac", 0.01))
+        self._grad_bucket_kb = int(getattr(config, "grad_bucket_kb", 512))
+        if self.halo_compress not in HALO_COMPRESS_MODES:
+            raise ValueError(f"unknown halo_compress {self.halo_compress!r} "
+                             f"(expected one of {HALO_COMPRESS_MODES})")
+        if self.grad_compress not in GRAD_COMPRESS_MODES:
+            raise ValueError(f"unknown grad_compress {self.grad_compress!r} "
+                             f"(expected one of {GRAD_COMPRESS_MODES})")
+        if self.halo_compress != "none" and self.overlap:
+            raise ValueError(
+                "halo_compress quantizes the gathered send buffer on the "
+                "combined-edge eval forward; the overlap forward has no "
+                "compressed spelling — pick one")
         self.features = jnp.asarray(pg.features, f)        # (P, maxN, D)
         self.send_idx = jnp.asarray(pg.send_idx)
         self.send_mask = jnp.asarray(pg.send_mask, f)
@@ -89,8 +110,9 @@ class SequentialReference:
             self.halo_cv = bool(getattr(config, "halo_cv", False))
             self.max_send = pg.send_idx.shape[-1]
             self._halo_slot_counts = np.asarray(pg.send_mask).sum(axis=(0, 1))
-            self._halo_byte_per_slot = (pg.features.shape[-1]
-                                        * pg.features.dtype.itemsize)
+            self._halo_byte_per_slot = wire_row_bytes(
+                pg.features.shape[-1], self.halo_compress,
+                pg.features.dtype.itemsize)
             # per-partition recv buffers, one per layer — the legible
             # rendering of the engine's stacked (P, P, maxS, D) cache state
             Pn = pg.num_parts
@@ -100,6 +122,19 @@ class SequentialReference:
                 for i, d in enumerate(model.layer_input_dims)}
             self._halo_age = 0
         self._halo_dtype = f
+        self._halo_rows_total = int(pg.n_halo.sum())
+        self._halo_row_width = pg.features.shape[-1]
+        self._halo_itemsize = pg.features.dtype.itemsize
+        if self.halo_compress != "none":
+            # per-partition send-side quantization error, one (P, maxS, d)
+            # buffer per sender per layer — the legible rendering of the
+            # engine's stacked build_stacked_halo_residual state
+            Pn = pg.num_parts
+            ms = pg.send_idx.shape[-1]
+            self._halo_residual = {
+                f"r{i}": [jnp.zeros((Pn, ms, d), f) for _ in range(Pn)]
+                for i, d in enumerate(model.layer_input_dims)}
+        self._grad_res = None   # lazy (P, N) top-k error-feedback state
         self._grad_step = jax.jit(jax.value_and_grad(loss_fn))
         self._pstep1 = jax.jit(make_personalize_partition_step(
             loss_fn, optimizer, hp))
@@ -123,6 +158,31 @@ class SequentialReference:
 
         self._apply_avg = _apply_avg
 
+        # compressed gradient syncs jit at the SAME granularity (reduce +
+        # update in one function) for the fused-rounding parity above
+        if self.grad_compress == "bucketed":
+            red_b = make_bucketed_reduce_stacked(P, self._grad_bucket_kb * 1024)
+
+            @jax.jit
+            def _apply_bucketed(params, opt_state, grads_stacked):
+                grads = red_b(grads_stacked)
+                updates, opt_state = optimizer.update(grads, opt_state, params)
+                return apply_updates(params, updates), opt_state
+
+            self._apply_grads = _apply_bucketed
+        else:
+            self._apply_grads = _apply_avg
+        if self.grad_compress == "topk":
+            red_t = make_topk_reduce_stacked(P, self._grad_topk_frac)
+
+            @jax.jit
+            def _apply_topk(params, opt_state, grads_stacked, res):
+                grads, res = red_t(grads_stacked, res)
+                updates, opt_state = optimizer.update(grads, opt_state, params)
+                return apply_updates(params, updates), opt_state, res
+
+            self._apply_topk = _apply_topk
+
     # --------------------------------------------------------- forward pass
     def _exchange(self, hs: list) -> list:
         """Explicit halo exchange: recv[q][p] = sent[p][q] (the all_to_all
@@ -133,6 +193,34 @@ class SequentialReference:
         out = []
         for q in range(P):
             recv = jnp.stack([sent[p][q] for p in range(P)])
+            flat_pos = self.recv_pos[q].reshape(-1)
+            flat_val = recv.reshape(-1, hs[q].shape[-1])
+            out.append(hs[q].at[flat_pos].set(flat_val.astype(hs[q].dtype)))
+        return out
+
+    def _exchange_comp(self, hs: list, rkey: str) -> list:
+        """Error-compensated quantized rendering of :meth:`_exchange` — the
+        legible mirror of ``_ef_quantized_exchange``: per sender, fold last
+        round's residual into the gathered send buffer, quantize, update
+        ``self._halo_residual[rkey]``, then transpose and scatter the
+        DEQUANTIZED rows.  Sender-side dequantization is bitwise the
+        receiver's (elementwise, deterministic), so dequantizing before the
+        transpose models the wire exactly."""
+        P = self.num_parts
+        mode = self.halo_compress
+        res = self._halo_residual[rkey]
+        deqs = []
+        for p in range(P):
+            m3 = self.send_mask[p][..., None]
+            sent = hs[p][self.send_idx[p]] * m3
+            sent_ef = (sent + res[p].astype(sent.dtype)) * m3
+            payload, scale = quantize_rows(sent_ef, mode)
+            deq = dequantize_rows(payload, scale, mode, sent.dtype)
+            res[p] = ((sent_ef - deq) * m3).astype(res[p].dtype)
+            deqs.append(deq)
+        out = []
+        for q in range(P):
+            recv = jnp.stack([deqs[p][q] for p in range(P)])
             flat_pos = self.recv_pos[q].reshape(-1)
             flat_val = recv.reshape(-1, hs[q].shape[-1])
             out.append(hs[q].at[flat_pos].set(flat_val.astype(hs[q].dtype)))
@@ -155,6 +243,23 @@ class SequentialReference:
             sent = [hs[p][self.send_idx[p][:, lo:hi]]
                     * self.send_mask[p][:, lo:hi][..., None]
                     for p in range(P)]
+            if self.halo_compress != "none":
+                # quantize the refresh payload with error feedback on the
+                # matching residual slot slice; downstream the cache stores
+                # the dequantized rows, exactly as the engine's cached
+                # forward does
+                mode = self.halo_compress
+                res = self._halo_residual["r" + key[1:]]
+                for p in range(P):
+                    m3 = self.send_mask[p][:, lo:hi][..., None]
+                    r_sl = res[p][:, lo:hi]
+                    sent_ef = (sent[p] + r_sl.astype(sent[p].dtype)) * m3
+                    payload, scale = quantize_rows(sent_ef, mode)
+                    deq = dequantize_rows(payload, scale, mode,
+                                          sent[p].dtype)
+                    res[p] = res[p].at[:, lo:hi].set(
+                        ((sent_ef - deq) * m3).astype(res[p].dtype))
+                    sent[p] = deq
         out = []
         for q in range(P):
             h = hs[q]
@@ -196,6 +301,26 @@ class SequentialReference:
         self._halo_age += 1
         return hs
 
+    def _full_forward_comp(self, params_list: list) -> list:
+        """Quantized-exchange eval forward: the plain layer schedule with
+        :meth:`_exchange_comp` carrying the per-layer residual.  Records the
+        compressed wire payload in ``last_halo_exchange_bytes``."""
+        P = self.num_parts
+        hs = [self.features[p] for p in range(P)]
+        num_layers = len(params_list[0].layers)
+        for i in range(num_layers):
+            hs = self._exchange_comp(hs, f"r{i}")
+            nxt = []
+            for p in range(P):
+                lp = params_list[p].layers[i]
+                agg = self._agg(hs[p], self._edge_shards[p])
+                out = hs[p] @ lp.w_self + agg @ lp.w_neigh + lp.b
+                nxt.append(jax.nn.relu(out) if i < num_layers - 1 else out)
+            hs = nxt
+        self.last_halo_exchange_bytes = (num_layers
+                                         * self.halo_wire_bytes_per_layer)
+        return hs
+
     def _full_forward(self, params_list: list) -> list:
         """Layer-synchronous n-layer GraphSAGE over all partitions — the same
         schedule the per-shard fwd runs, unrolled in Python."""
@@ -203,6 +328,11 @@ class SequentialReference:
             return self._full_forward_overlap(params_list)
         if self.halo_cache:
             return self._full_forward_cached(params_list)
+        if self.halo_compress != "none":
+            return self._full_forward_comp(params_list)
+        return self._full_forward_plain(params_list)
+
+    def _full_forward_plain(self, params_list: list) -> list:
         P = self.num_parts
         hs = [self.features[p] for p in range(P)]
         num_layers = len(params_list[0].layers)
@@ -280,7 +410,12 @@ class SequentialReference:
         b0 = jax.tree.map(lambda x: x[0, 0], batches)
         _, g0 = self._grad_step(params, b0)
         z = jax.tree.map(lambda g: jnp.stack([g] * P), g0)
-        jax.block_until_ready(self._apply_avg(params, opt_state, z))
+        topk = self.grad_compress == "topk"
+        if topk:
+            res = self._grad_residual(params)
+            jax.block_until_ready(self._apply_topk(params, opt_state, z, res))
+        else:
+            jax.block_until_ready(self._apply_grads(params, opt_state, z))
 
         t0 = time.perf_counter()
         all_losses = []
@@ -294,10 +429,17 @@ class SequentialReference:
             # deterministic all-reduce (stack then axis-0 sum, / P — the same
             # reduction the stacked engine performs) + jitted update
             stacked = jax.tree.map(lambda *gs: jnp.stack(gs), *grads)
-            params, opt_state = self._apply_avg(params, opt_state, stacked)
+            if topk:
+                params, opt_state, res = self._apply_topk(
+                    params, opt_state, stacked, res)
+            else:
+                params, opt_state = self._apply_grads(params, opt_state,
+                                                      stacked)
             all_losses.append(jnp.stack(losses))
         jax.block_until_ready(params)
         dt = time.perf_counter() - t0
+        if topk:
+            self._grad_res = res
         val_micro, _ = self._eval([params] * P, "val")
         return params, opt_state, jnp.stack(all_losses), val_micro, dt
 
@@ -329,7 +471,12 @@ class SequentialReference:
         b0 = ds.make_batch(drawn[0][2][0], drawn[0][0][0], drawn[0][1][0])
         _, g0 = self._grad_step(params, b0)
         z = jax.tree.map(lambda g: jnp.stack([g] * P), g0)
-        jax.block_until_ready(self._apply_avg(params, opt_state, z))
+        topk = self.grad_compress == "topk"
+        if topk:
+            res = self._grad_residual(params)
+            jax.block_until_ready(self._apply_topk(params, opt_state, z, res))
+        else:
+            jax.block_until_ready(self._apply_grads(params, opt_state, z))
 
         t0 = time.perf_counter()
         all_losses = []
@@ -342,8 +489,15 @@ class SequentialReference:
                 losses.append(l)
                 grads.append(g)
             stacked = jax.tree.map(lambda *gs: jnp.stack(gs), *grads)
-            params, opt_state = self._apply_avg(params, opt_state, stacked)
+            if topk:
+                params, opt_state, res = self._apply_topk(
+                    params, opt_state, stacked, res)
+            else:
+                params, opt_state = self._apply_grads(params, opt_state,
+                                                      stacked)
             all_losses.append(jnp.stack(losses))
+        if topk:
+            self._grad_res = res
         # the fused program's eval is part of the one device call: include
         # it in the timed window (unlike phase0_epoch, whose eval is a
         # separate call excluded from the train timing)
@@ -369,6 +523,10 @@ class SequentialReference:
                 "halo_cache is an eval-forward optimisation; full-graph "
                 "training differentiates through the live halo exchange "
                 "and cannot train against stale cached embeddings")
+        if self.grad_compress == "topk":
+            raise ValueError(
+                "top-k gradient sparsification is a sampled phase-0 feature; "
+                "full-graph training keeps the exact (or bucketed) all-reduce")
 
         from ..train.losses import cross_entropy_loss, focal_loss
 
@@ -379,9 +537,14 @@ class SequentialReference:
             base_loss = (partial(focal_loss, gamma=2.0)
                          if self._fg_loss_kind == "focal"
                          else cross_entropy_loss)
+            # training differentiates through the LIVE uncompressed exchange
+            # even when halo_compress is on (the engine's self.fwd does the
+            # same); only eval forwards quantize
+            fg_fwd = (self._full_forward_overlap if self.overlap
+                      else self._full_forward_plain)
 
             def loss_p(prm, p):
-                logits = self._full_forward([prm] * P)
+                logits = fg_fwd([prm] * P)
                 return base_loss(logits[p], labels[p], mask=train_m[p])
 
             @jax.jit
@@ -393,7 +556,8 @@ class SequentialReference:
                     grads.append(g)
                 stacked = jax.tree.map(lambda *gs: jnp.stack(gs), *grads)
                 # inner jit inlines under this trace: same fused arithmetic
-                params, opt_state = self._apply_avg(params, opt_state, stacked)
+                params, opt_state = self._apply_grads(params, opt_state,
+                                                      stacked)
                 return params, opt_state, jnp.stack(losses)
 
             self._fg_step = fg_step
@@ -509,3 +673,40 @@ class SequentialReference:
         self._halo_state = jax.tree.map(
             lambda x: jnp.asarray(x, self._halo_dtype), state)
         self._halo_age = int(age)
+
+    # -------------------------------------- compressed communication state
+    @property
+    def halo_wire_bytes_per_layer(self) -> int:
+        """Real payload bytes ONE layer's halo exchange puts on the wire
+        under the configured compression (mirrors SPMDEngine)."""
+        return self._halo_rows_total * wire_row_bytes(
+            self._halo_row_width, self.halo_compress, self._halo_itemsize)
+
+    def _grad_residual(self, params):
+        """Lazily-built (P, N) top-k error-feedback state, zero before the
+        first compressed sync (mirrors SPMDEngine)."""
+        if self._grad_res is None:
+            from jax.flatten_util import ravel_pytree
+
+            flat, _ = ravel_pytree(params)
+            self._grad_res = jnp.zeros((self.num_parts, flat.shape[0]),
+                                       flat.dtype)
+        return self._grad_res
+
+    def comm_residual_state(self):
+        """``(halo_residual, grad_residual)`` for checkpointing; each entry
+        None when the matching compression is off (or, for top-k, before
+        the first phase-0 step).  None when neither exists."""
+        h = self._halo_residual if self.halo_compress != "none" else None
+        g = self._grad_res if self.grad_compress == "topk" else None
+        if h is None and g is None:
+            return None
+        return h, g
+
+    def restore_comm_residual_state(self, state) -> None:
+        h, g = state
+        if h is not None:
+            self._halo_residual = jax.tree.map(
+                lambda x: jnp.asarray(x, self._halo_dtype), h)
+        if g is not None:
+            self._grad_res = jnp.asarray(g)

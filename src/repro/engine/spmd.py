@@ -37,19 +37,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..core.gp.trainer import (GPHyperParams, make_fullgraph_loss_fn,
+from ..core.gp.trainer import (GPHyperParams, GRAD_COMPRESS_MODES,
+                               grad_topk_size, make_bucketed_reduce_shard,
+                               make_bucketed_reduce_stacked,
+                               make_fullgraph_loss_fn,
                                make_personalize_partition_step,
-                               make_personalize_step)
-from ..graph.distributed import (PartitionedGraph, halo_refresh_plan,
+                               make_personalize_step,
+                               make_topk_reduce_shard,
+                               make_topk_reduce_stacked)
+from ..graph.distributed import (HALO_COMPRESS_MODES, PartitionedGraph,
+                                 halo_refresh_plan,
                                  make_cached_forward, make_distributed_forward,
                                  make_export_forward,
                                  make_overlap_forward, make_pallas_mean_agg,
                                  make_pallas_split_agg, make_ref_mean_agg,
-                                 make_ref_split_agg)
+                                 make_ref_split_agg, wire_row_bytes)
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 from .compat import shard_map_compat
-from .stacking import (build_stacked_halo_cache,
+from .stacking import (build_stacked_halo_cache, build_stacked_halo_residual,
                        build_stacked_split_vjp_blocks,
                        build_stacked_vjp_blocks, stack_pytrees)
 
@@ -82,6 +88,15 @@ class EngineConfig:
     halo_cache: bool = False
     halo_refresh_every: int = 1
     halo_cv: bool = False
+    # compressed communication (DESIGN.md §11): quantized halo exchange on
+    # the eval forwards ("none" | "fp16" | "int8", error-compensated via a
+    # carried send-side residual) and the phase-0 gradient all-reduce
+    # spelling ("none" | "bucketed" | "topk"); compression off is bit-for-
+    # bit today's traces by construction
+    halo_compress: str = "none"
+    grad_compress: str = "none"
+    grad_topk_frac: float = 0.01    # fraction of entries top-k ships
+    grad_bucket_kb: int = 512       # bucketed psum slice size
 
 
 def _resolve_mode(mode: str, num_parts: int) -> str:
@@ -158,6 +173,25 @@ class SPMDEngine:
         self.max_nodes = pg.max_nodes
         self.mode = _resolve_mode(config.mode, pg.num_parts)
 
+        if config.halo_compress not in HALO_COMPRESS_MODES:
+            raise ValueError(f"unknown halo_compress {config.halo_compress!r} "
+                             f"(expected one of {HALO_COMPRESS_MODES})")
+        if config.grad_compress not in GRAD_COMPRESS_MODES:
+            raise ValueError(f"unknown grad_compress {config.grad_compress!r} "
+                             f"(expected one of {GRAD_COMPRESS_MODES})")
+        if config.halo_compress != "none" and config.overlap_halo:
+            raise ValueError(
+                "halo_compress quantizes the gathered send buffer on the "
+                "combined-edge eval forward; the overlap forward has no "
+                "compressed spelling — pick one")
+        self.halo_compress = config.halo_compress
+        self.grad_compress = config.grad_compress
+        # wire accounting basis: real halo rows per layer and the payload
+        # dtype's itemsize (never a hardcoded 4)
+        self._halo_rows_total = int(pg.n_halo.sum())
+        self._halo_row_width = pg.features.shape[-1]
+        self._halo_itemsize = pg.features.dtype.itemsize
+
         f = config.dtype
         self.shards = {
             "features": jnp.asarray(pg.features, f),
@@ -221,6 +255,19 @@ class SPMDEngine:
             self._mean_agg = agg
             self.fwd = make_distributed_forward(model, meta, axis_name=AXIS,
                                                 agg=agg)
+            if config.halo_compress != "none":
+                # the compressed eval forward; self.fwd stays uncompressed
+                # (full-graph training differentiates through the live
+                # exchange, and the serving export needs exact embeddings)
+                self._fwd_comp = make_distributed_forward(
+                    model, meta, axis_name=AXIS, agg=agg,
+                    compress=config.halo_compress,
+                    ring_chunks=config.ring_chunks)
+        if self.halo_compress != "none":
+            self._halo_residual = jax.tree.map(
+                lambda x: jnp.asarray(x, f),
+                build_stacked_halo_residual(pg, model.layer_input_dims))
+        self._grad_res = None   # lazy (P, N) top-k error-feedback state
         self.halo_cache = bool(config.halo_cache)
         self.last_halo_exchange_bytes = 0
         if self.halo_cache:
@@ -229,8 +276,9 @@ class SPMDEngine:
             # payload accounting; halo_slot_bytes(0, maxS) == the graph's
             # halo_bytes_per_layer
             self._halo_slot_counts = np.asarray(pg.send_mask).sum(axis=(0, 1))
-            self._halo_byte_per_slot = (pg.features.shape[-1]
-                                        * pg.features.dtype.itemsize)
+            self._halo_byte_per_slot = wire_row_bytes(
+                pg.features.shape[-1], config.halo_compress,
+                pg.features.dtype.itemsize)
             self._halo_state = jax.tree.map(
                 lambda x: jnp.asarray(x, f),
                 build_stacked_halo_cache(pg, model.layer_input_dims))
@@ -330,18 +378,72 @@ class SPMDEngine:
         self._halo_state = jax.tree.map(lambda x: jnp.asarray(x, f), state)
         self._halo_age = int(age)
 
+    # -------------------------------------- compressed communication state
+    @property
+    def halo_wire_bytes_per_layer(self) -> int:
+        """Real payload bytes ONE layer's halo exchange puts on the wire
+        under the configured compression — the dtype-truthful replacement
+        for assuming 4-byte rows.  Equals ``pg.halo_bytes_per_layer`` when
+        ``halo_compress == "none"``."""
+        return self._halo_rows_total * wire_row_bytes(
+            self._halo_row_width, self.halo_compress, self._halo_itemsize)
+
+    def _grad_residual(self, params):
+        """Lazily-built (P, N) top-k error-feedback state (flat per-partition
+        gradient space), zero before the first compressed sync."""
+        if self._grad_res is None:
+            from jax.flatten_util import ravel_pytree
+
+            flat, _ = ravel_pytree(params)
+            self._grad_res = jnp.zeros((self.num_parts, flat.shape[0]),
+                                       flat.dtype)
+        return self._grad_res
+
+    def comm_residual_state(self):
+        """Error-feedback residual pytrees for checkpointing:
+        ``(halo_residual, grad_residual)``; each entry is None when the
+        matching compression is off (or, for top-k, before the first
+        phase-0 step).  None when neither exists."""
+        h = self._halo_residual if self.halo_compress != "none" else None
+        g = self._grad_res if self.grad_compress == "topk" else None
+        if h is None and g is None:
+            return None
+        return h, g
+
+    def restore_comm_residual_state(self, state) -> None:
+        h, g = state
+        if h is not None:
+            f = self.config.dtype
+            self._halo_residual = jax.tree.map(
+                lambda x: jnp.asarray(x, f), h)
+        if g is not None:
+            self._grad_res = jnp.asarray(g)
+
     def _cached_fwd(self, lo: int, hi: int):
         key = (lo, hi)
         if key not in self._cached_fwds:
             self._cached_fwds[key] = make_cached_forward(
                 self.model, self._fwd_meta, axis_name=AXIS,
                 agg=self._mean_agg, refresh_lo=lo, refresh_hi=hi,
-                ring_chunks=self.config.ring_chunks)
+                ring_chunks=self.config.ring_chunks,
+                compress=self.halo_compress)
         return self._cached_fwds[key]
 
     def _eval_stacked_cached(self, params, cache, split: str,
-                             per_partition_params: bool, plan):
+                             per_partition_params: bool, plan, residual=None):
         fwd_c = self._cached_fwd(*plan)
+
+        if residual is not None:
+            def one_c(prm, shard, c, r, labels, mask):
+                logits, nc, nr = fwd_c(prm, shard, c, r)
+                preds = jnp.argmax(logits, axis=-1)
+                return self._micro_of(preds, labels, mask), preds, nc, nr
+
+            return jax.vmap(one_c, axis_name=AXIS,
+                            in_axes=(0 if per_partition_params else None,
+                                     0, 0, 0, 0, 0))(
+                params, self.shards, cache, residual, self.labels,
+                self.masks[split])
 
         def one(prm, shard, c, labels, mask):
             logits, nc = fwd_c(prm, shard, c)
@@ -354,24 +456,68 @@ class SPMDEngine:
             params, self.shards, cache, self.labels, self.masks[split])
 
     def _eval_spmd_cached(self, params, cache, split: str,
-                          per_partition_params: bool, plan):
+                          per_partition_params: bool, plan, residual=None):
         fwd_c = self._cached_fwd(*plan)
+        comp = residual is not None
 
-        def shard_fn(prm, cache_s, shard_s, labels_s, mask_s):
+        def shard_fn(prm, cache_s, shard_s, labels_s, mask_s, *res_s):
             p = jax.tree.map(lambda x: x[0], prm) if per_partition_params else prm
             sh = jax.tree.map(lambda x: x[0], shard_s)
             c = jax.tree.map(lambda x: x[0], cache_s)
-            logits, nc = fwd_c(p, sh, c)
+            if comp:
+                r = jax.tree.map(lambda x: x[0], res_s[0])
+                logits, nc, nr = fwd_c(p, sh, c, r)
+            else:
+                logits, nc = fwd_c(p, sh, c)
             preds = jnp.argmax(logits, axis=-1)
             micro = self._micro_of(preds, labels_s[0], mask_s[0])
-            return micro[None], preds[None], jax.tree.map(lambda x: x[None], nc)
+            head = (micro[None], preds[None],
+                    jax.tree.map(lambda x: x[None], nc))
+            return head + ((jax.tree.map(lambda x: x[None], nr),)
+                           if comp else ())
+
+        fn = shard_map_compat(
+            shard_fn, self._mesh,
+            in_specs=(P(AXIS) if per_partition_params else P(),
+                      P(AXIS), P(AXIS), P(AXIS), P(AXIS))
+                     + ((P(AXIS),) if comp else ()),
+            out_specs=(P(AXIS), P(AXIS), P(AXIS))
+                      + ((P(AXIS),) if comp else ()))
+        args = (params, cache, self.shards, self.labels, self.masks[split])
+        if comp:
+            args = args + (residual,)
+        return fn(*args)
+
+    def _eval_stacked_comp(self, params, residual, split: str,
+                           per_partition_params: bool):
+        def one(prm, shard, r, labels, mask):
+            logits, nr = self._fwd_comp(prm, shard, r)
+            preds = jnp.argmax(logits, axis=-1)
+            return self._micro_of(preds, labels, mask), preds, nr
+
+        return jax.vmap(one, axis_name=AXIS,
+                        in_axes=(0 if per_partition_params else None,
+                                 0, 0, 0, 0))(
+            params, self.shards, residual, self.labels, self.masks[split])
+
+    def _eval_spmd_comp(self, params, residual, split: str,
+                        per_partition_params: bool):
+        def shard_fn(prm, res_s, shard_s, labels_s, mask_s):
+            p = jax.tree.map(lambda x: x[0], prm) if per_partition_params else prm
+            sh = jax.tree.map(lambda x: x[0], shard_s)
+            r = jax.tree.map(lambda x: x[0], res_s)
+            logits, nr = self._fwd_comp(p, sh, r)
+            preds = jnp.argmax(logits, axis=-1)
+            micro = self._micro_of(preds, labels_s[0], mask_s[0])
+            return micro[None], preds[None], jax.tree.map(lambda x: x[None], nr)
 
         fn = shard_map_compat(
             shard_fn, self._mesh,
             in_specs=(P(AXIS) if per_partition_params else P(),
                       P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
             out_specs=(P(AXIS), P(AXIS), P(AXIS)))
-        return fn(params, cache, self.shards, self.labels, self.masks[split])
+        return fn(params, residual, self.shards, self.labels,
+                  self.masks[split])
 
     # ------------------------------------------------- stacked (vmap) mode
     def _eval_stacked(self, params, split: str, per_partition_params: bool):
@@ -382,15 +528,55 @@ class SPMDEngine:
         micro = jax.vmap(self._micro_of)(preds, self.labels, self.masks[split])
         return micro, preds
 
-    def _phase0_stacked(self, params, opt_state, batches):
+    def _grad_reduce_stacked(self):
+        """Stacked-mode gradient reducer for the configured grad_compress
+        mode: ``reduce(grads_stacked) -> grads`` (none / bucketed) or
+        ``reduce(grads_stacked, residual) -> (grads, residual)`` (topk)."""
         num_parts = self.num_parts
+        if self.grad_compress == "bucketed":
+            return make_bucketed_reduce_stacked(
+                num_parts, self.config.grad_bucket_kb * 1024)
+        if self.grad_compress == "topk":
+            return make_topk_reduce_stacked(num_parts,
+                                            self.config.grad_topk_frac)
+        # the all-reduce: stacked-axis mean == lax.pmean on the mesh
+        return lambda grads: jax.tree.map(
+            lambda g: jnp.sum(g, axis=0) / num_parts, grads)
+
+    def _grad_reduce_shard(self):
+        """Per-shard (collective) reducer for grad_compress; mode "none"
+        returns None — the caller keeps its existing spelling untouched."""
+        if self.grad_compress == "bucketed":
+            return make_bucketed_reduce_shard(
+                self.num_parts, AXIS, self.config.grad_bucket_kb * 1024)
+        if self.grad_compress == "topk":
+            return make_topk_reduce_shard(self.num_parts, AXIS,
+                                          self.config.grad_topk_frac)
+        return None
+
+    def _phase0_stacked(self, params, opt_state, batches, grad_res=None):
+        reduce = self._grad_reduce_stacked()
+
+        if self.grad_compress == "topk":
+            def one_iter_t(carry, b_it):
+                params, opt_state, res = carry
+                losses, grads = jax.vmap(
+                    jax.value_and_grad(self.loss_fn),
+                    in_axes=(None, 0))(params, b_it)
+                grads, res = reduce(grads, res)
+                updates, opt_state = self.optimizer.update(grads, opt_state,
+                                                           params)
+                return (apply_updates(params, updates), opt_state, res), losses
+
+            (params, opt_state, grad_res), losses = jax.lax.scan(
+                one_iter_t, (params, opt_state, grad_res), batches)
+            return params, opt_state, losses, grad_res
 
         def one_iter(carry, b_it):
             params, opt_state = carry
             losses, grads = jax.vmap(
                 jax.value_and_grad(self.loss_fn), in_axes=(None, 0))(params, b_it)
-            # the all-reduce: stacked-axis mean == lax.pmean on the mesh
-            grads = jax.tree.map(lambda g: jnp.sum(g, axis=0) / num_parts, grads)
+            grads = reduce(grads)
             updates, opt_state = self.optimizer.update(grads, opt_state, params)
             params = apply_updates(params, updates)
             return (params, opt_state), losses
@@ -406,8 +592,8 @@ class SPMDEngine:
                 "train_mask": self.masks["train"]}
 
     def _phase0_fullgraph_stacked(self, params, opt_state, iters: int):
-        num_parts = self.num_parts
         batch = self._fg_batch()
+        reduce = self._grad_reduce_stacked()
 
         def one_iter(carry, _):
             params, opt_state = carry
@@ -417,7 +603,7 @@ class SPMDEngine:
             losses, grads = jax.vmap(
                 jax.value_and_grad(self._fg_loss), in_axes=(None, 0),
                 axis_name=AXIS)(params, batch)
-            grads = jax.tree.map(lambda g: jnp.sum(g, axis=0) / num_parts, grads)
+            grads = reduce(grads)
             updates, opt_state = self.optimizer.update(grads, opt_state, params)
             params = apply_updates(params, updates)
             return (params, opt_state), losses
@@ -427,6 +613,8 @@ class SPMDEngine:
         return params, opt_state, losses
 
     def _phase0_fullgraph_spmd(self, params, opt_state, iters: int):
+        g_reduce = self._grad_reduce_shard()
+
         def shard_fn(params, opt_state, shard_s, labels_s, mask_s):
             batch = {"shard": jax.tree.map(lambda x: x[0], shard_s),
                      "labels": labels_s[0], "train_mask": mask_s[0]}
@@ -434,7 +622,8 @@ class SPMDEngine:
             def one(carry, _):
                 p, o = carry
                 loss, grads = jax.value_and_grad(self._fg_loss)(p, batch)
-                grads = jax.lax.pmean(grads, AXIS)
+                grads = (jax.lax.pmean(grads, AXIS) if g_reduce is None
+                         else g_reduce(grads))
                 updates, o = self.optimizer.update(grads, o, p)
                 return (apply_updates(p, updates), o), loss
 
@@ -457,60 +646,101 @@ class SPMDEngine:
         forward — all on a single trace (DESIGN.md §7).  The SINGLE body both
         modes execute, so PRNG consumption order cannot drift between them.
 
-        The gradient all-reduce is spelled ``all_gather`` + a local
+        The default gradient all-reduce is spelled ``all_gather`` + a local
         stack-axis sum: pure data movement followed by the SAME deterministic
         reduction the sequential oracle performs, which is what makes the
         spmd mesh mode bit-for-bit with the reference (a ``pmean``'s
         reduction order is the collective implementation's choice).
+        ``grad_compress`` swaps in the bucketed-psum or top-k spelling.
+
+        ``*state`` carries the eval/EF pytrees in a fixed order — halo
+        cache (when ``plan`` is set), halo residual (``halo_compress``),
+        flat gradient residual (``grad_compress == "topk"``) — and the
+        return tuple appends their updated values in the same order after
+        ``(params, opt_state, losses, micro)``.
         """
         ds = self._device_sampler
         num_parts = self.num_parts
+        comp = self.halo_compress != "none"
+        topk = self.grad_compress == "topk"
         fwd_c = self._cached_fwd(*plan) if plan is not None else None
+        g_reduce = self._grad_reduce_shard()
 
         def per_part(params, opt_state, key, logp_row, train_row, k_row,
-                     shard, labels, val_mask, *cache):
+                     shard, labels, val_mask, *state):
+            st = list(state)
+            cache = st.pop(0) if fwd_c is not None else None
+            h_res = st.pop(0) if comp else None
+            g_res = st.pop(0) if topk else None
             kd, ke = jax.random.split(key)
             nodes, valid = ds.draw_epoch(kd, logp_row, train_row, k_row)
             iter_keys = jax.random.split(ke, ds.num_batches)
 
-            def one(carry, xs):
-                n_i, v_i, k_i = xs
-                p, o = carry
-                batch = ds.make_batch(k_i, n_i, v_i)
-                loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
-                g_all = jax.lax.all_gather(grads, AXIS)        # (P, ...)
-                grads = jax.tree.map(
-                    lambda g: jnp.sum(g, axis=0) / num_parts, g_all)
-                updates, o = self.optimizer.update(grads, o, p)
-                return (apply_updates(p, updates), o), loss
+            if topk:
+                def one_t(carry, xs):
+                    n_i, v_i, k_i = xs
+                    p, o, r = carry
+                    batch = ds.make_batch(k_i, n_i, v_i)
+                    loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
+                    grads, r = g_reduce(grads, r)
+                    updates, o = self.optimizer.update(grads, o, p)
+                    return (apply_updates(p, updates), o, r), loss
 
-            (params, opt_state), losses = jax.lax.scan(
-                one, (params, opt_state), (nodes, valid, iter_keys))
+                (params, opt_state, g_res), losses = jax.lax.scan(
+                    one_t, (params, opt_state, g_res),
+                    (nodes, valid, iter_keys))
+            else:
+                def one(carry, xs):
+                    n_i, v_i, k_i = xs
+                    p, o = carry
+                    batch = ds.make_batch(k_i, n_i, v_i)
+                    loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
+                    if g_reduce is not None:              # bucketed psum
+                        grads = g_reduce(grads)
+                    else:
+                        g_all = jax.lax.all_gather(grads, AXIS)   # (P, ...)
+                        grads = jax.tree.map(
+                            lambda g: jnp.sum(g, axis=0) / num_parts, g_all)
+                    updates, o = self.optimizer.update(grads, o, p)
+                    return (apply_updates(p, updates), o), loss
+
+                (params, opt_state), losses = jax.lax.scan(
+                    one, (params, opt_state), (nodes, valid, iter_keys))
             # fused eval: the validation forward (halo exchange + blocked
             # aggregation + on-device F1) on the epoch's final params, in
             # the SAME device program as the train scan
+            extras = []
             if fwd_c is not None:
-                logits, new_cache = fwd_c(params, shard, cache[0])
-                preds = jnp.argmax(logits, axis=-1)
-                micro = self._micro_of(preds, labels, val_mask)
-                return params, opt_state, losses, micro, new_cache
-            preds = jnp.argmax(self.fwd(params, shard), axis=-1)
+                if comp:
+                    logits, new_cache, new_hres = fwd_c(params, shard,
+                                                        cache, h_res)
+                    extras += [new_cache, new_hres]
+                else:
+                    logits, new_cache = fwd_c(params, shard, cache)
+                    extras += [new_cache]
+            elif comp:
+                logits, new_hres = self._fwd_comp(params, shard, h_res)
+                extras += [new_hres]
+            else:
+                logits = self.fwd(params, shard)
+            preds = jnp.argmax(logits, axis=-1)
             micro = self._micro_of(preds, labels, val_mask)
-            return params, opt_state, losses, micro
+            if topk:
+                extras += [g_res]
+            return (params, opt_state, losses, micro) + tuple(extras)
 
         return per_part
 
-    def _phase0_async_stacked(self, params, opt_state, keys, cache=None,
+    def _phase0_async_stacked(self, params, opt_state, keys, state=(),
                               plan=None):
         ds = self._device_sampler
         per_part = self._phase0_async_partition_program(plan)
-        extra_args = (cache,) if cache is not None else ()
-        extra_axes = (0,) * len(extra_args)
+        extra_axes = (0,) * len(state)
         out = jax.vmap(
             per_part, axis_name=AXIS,
             in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0) + extra_axes)(
                 params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
-                self.shards, self.labels, self.masks["val"], *extra_args)
+                self.shards, self.labels, self.masks["val"], *state)
         params, opt_state, losses, micro = out[:4]
         # every partition applies the identical mean update to the identical
         # replica: return one copy (bitwise equal across the stacked axis)
@@ -519,16 +749,16 @@ class SPMDEngine:
                 losses.T, micro)                    # (I, P), (P,)
         return head + tuple(out[4:])
 
-    def _phase0_async_spmd(self, params, opt_state, keys, cache=None,
+    def _phase0_async_spmd(self, params, opt_state, keys, state=(),
                            plan=None):
         ds = self._device_sampler
-        cached = cache is not None
+        n_st = len(state)
 
         def shard_fn(params, opt_state, key_s, logp_s, train_s, k_s,
-                     shard_s, labels_s, mask_s, *cache_s):
+                     shard_s, labels_s, mask_s, *state_s):
             per_part = self._phase0_async_partition_program(plan)
             sh = jax.tree.map(lambda x: x[0], shard_s)
-            extra = tuple(jax.tree.map(lambda x: x[0], c) for c in cache_s)
+            extra = tuple(jax.tree.map(lambda x: x[0], c) for c in state_s)
             out = per_part(
                 params, opt_state, key_s[0], logp_s[0], train_s[0], k_s[0],
                 sh, labels_s[0], mask_s[0], *extra)
@@ -540,14 +770,10 @@ class SPMDEngine:
         fn = shard_map_compat(
             shard_fn, self._mesh,
             in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P(AXIS),
-                      P(AXIS), P(AXIS), P(AXIS)) + ((P(AXIS),) if cached
-                                                    else ()),
-            out_specs=(P(), P(), P(None, AXIS), P(AXIS)) + ((P(AXIS),)
-                                                            if cached else ()))
+                      P(AXIS), P(AXIS), P(AXIS)) + (P(AXIS),) * n_st,
+            out_specs=(P(), P(), P(None, AXIS), P(AXIS)) + (P(AXIS),) * n_st)
         args = (params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
-                self.shards, self.labels, self.masks["val"])
-        if cached:
-            args = args + (cache,)
+                self.shards, self.labels, self.masks["val"]) + tuple(state)
         return fn(*args)
 
     def _phase1_stacked(self, pparams, popt, batches, global_params, budgets):
@@ -606,13 +832,37 @@ class SPMDEngine:
         return pparams, popt, losses.T              # (i_run, P)
 
     # --------------------------------------------------- spmd (mesh) mode
-    def _phase0_spmd(self, params, opt_state, batches):
+    def _phase0_spmd(self, params, opt_state, batches, grad_res=None):
+        g_reduce = self._grad_reduce_shard()
+
+        if self.grad_compress == "topk":
+            def shard_fn_t(params, opt_state, b_s, res_s):
+                b = jax.tree.map(lambda x: x[:, 0], b_s)   # (I, ...)
+
+                def one(carry, bi):
+                    p, o, r = carry
+                    loss, grads = jax.value_and_grad(self.loss_fn)(p, bi)
+                    grads, r = g_reduce(grads, r)
+                    updates, o = self.optimizer.update(grads, o, p)
+                    return (apply_updates(p, updates), o, r), loss
+
+                (params, opt_state, res), losses = jax.lax.scan(
+                    one, (params, opt_state, res_s[0]), b)
+                return params, opt_state, losses[:, None], res[None]
+
+            fn = shard_map_compat(
+                shard_fn_t, self._mesh,
+                in_specs=(P(), P(), P(None, AXIS), P(AXIS)),
+                out_specs=(P(), P(), P(None, AXIS), P(AXIS)))
+            return fn(params, opt_state, batches, grad_res)
+
         # like make_generalize_step(axis_names=(AXIS,)) but reporting the
         # LOCAL loss: the stacked/sequential paths record per-host losses, so
         # the engine's (I, P) loss matrix must stay per-host for parity
         def gen_step(params, opt_state, batch):
             loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
-            grads = jax.lax.pmean(grads, AXIS)
+            grads = (jax.lax.pmean(grads, AXIS) if g_reduce is None
+                     else g_reduce(grads))
             updates, opt_state = self.optimizer.update(grads, opt_state, params)
             return apply_updates(params, updates), opt_state, loss
 
@@ -718,9 +968,17 @@ class SPMDEngine:
 
     def phase0_epoch(self, params, opt_state, batches):
         impl = self._phase0_spmd if self.mode == "spmd" else self._phase0_stacked
-        fn = self._compiled("phase0", impl, params, opt_state, batches)
-        (params, opt_state, losses), dt = self._timed(
-            fn, params, opt_state, batches)
+        if self.grad_compress == "topk":
+            res = self._grad_residual(params)
+            fn = self._compiled("phase0", impl, params, opt_state, batches,
+                                res)
+            (params, opt_state, losses, new_res), dt = self._timed(
+                fn, params, opt_state, batches, res)
+            self._grad_res = new_res
+        else:
+            fn = self._compiled("phase0", impl, params, opt_state, batches)
+            (params, opt_state, losses), dt = self._timed(
+                fn, params, opt_state, batches)
         val_micro, _ = self.evaluate(params, "val", per_partition_params=False)
         return params, opt_state, losses, val_micro, dt
 
@@ -746,15 +1004,35 @@ class SPMDEngine:
             raise ValueError("phase0_epoch_async needs set_device_sampler()")
         base = (self._phase0_async_spmd if self.mode == "spmd"
                 else self._phase0_async_stacked)
-        if self.halo_cache:
-            plan = self._halo_plan()
-            impl = lambda p, o, k, c: base(p, o, k, c, plan)
-            fn = self._compiled(
-                f"phase0_async-g{self._sampler_gen}-c{plan[0]}-{plan[1]}",
-                impl, params, opt_state, keys, self._halo_state)
-            (params, opt_state, losses, val_micro, new_state), dt = \
-                self._timed(fn, params, opt_state, keys, self._halo_state)
-            self._halo_tick(plan, new_state)
+        comp = self.halo_compress != "none"
+        topk = self.grad_compress == "topk"
+        plan = self._halo_plan() if self.halo_cache else None
+        # carried state, in the partition program's fixed order
+        state = ()
+        if plan is not None:
+            state += (self._halo_state,)
+        if comp:
+            state += (self._halo_residual,)
+        if topk:
+            state += (self._grad_residual(params),)
+        if state:
+            impl = lambda p, o, k, *st: base(p, o, k, st, plan)
+            name = f"phase0_async-g{self._sampler_gen}"
+            if plan is not None:
+                name += f"-c{plan[0]}-{plan[1]}"
+            fn = self._compiled(name, impl, params, opt_state, keys, *state)
+            out, dt = self._timed(fn, params, opt_state, keys, *state)
+            params, opt_state, losses, val_micro = out[:4]
+            rest = list(out[4:])
+            if plan is not None:
+                self._halo_tick(plan, rest.pop(0))
+            if comp:
+                self._halo_residual = rest.pop(0)
+                if plan is None:
+                    self.last_halo_exchange_bytes = (
+                        self.model.num_layers * self.halo_wire_bytes_per_layer)
+            if topk:
+                self._grad_res = rest.pop(0)
         else:
             fn = self._compiled(f"phase0_async-g{self._sampler_gen}", base,
                                 params, opt_state, keys)
@@ -776,6 +1054,10 @@ class SPMDEngine:
                 "halo_cache is an eval-forward optimisation; full-graph "
                 "training differentiates through the live halo exchange "
                 "and cannot train against stale cached embeddings")
+        if self.grad_compress == "topk":
+            raise ValueError(
+                "top-k gradient sparsification is a sampled phase-0 feature; "
+                "full-graph training keeps the exact (or bucketed) all-reduce")
         impl = (self._phase0_fullgraph_spmd if self.mode == "spmd"
                 else self._phase0_fullgraph_stacked)
         fn = self._compiled(f"phase0_fg-{iters}",
@@ -852,23 +1134,46 @@ class SPMDEngine:
 
     def evaluate(self, params, split: str = "test",
                  per_partition_params: bool = True):
+        comp = self.halo_compress != "none"
         if self.halo_cache:
             # the refresh slot range is a static host-side plan, so every
             # plan gets its own executable (the pure-cached one has no
-            # collective at all); the cache rides through as carried state
+            # collective at all); the cache rides through as carried state,
+            # and under halo_compress so does the quantization residual
             plan = self._halo_plan()
+            res = (self._halo_residual,) if comp else ()
             if self.mode == "spmd":
-                impl = lambda prm, c: self._eval_spmd_cached(
-                    prm, c, split, per_partition_params, plan)
+                impl = lambda prm, c, *r: self._eval_spmd_cached(
+                    prm, c, split, per_partition_params, plan, *r)
             else:
-                impl = lambda prm, c: self._eval_stacked_cached(
-                    prm, c, split, per_partition_params, plan)
+                impl = lambda prm, c, *r: self._eval_stacked_cached(
+                    prm, c, split, per_partition_params, plan, *r)
             fn = self._compiled(
                 f"eval-{split}-{per_partition_params}-c{plan[0]}-{plan[1]}",
-                impl, params, self._halo_state)
-            (micro, preds, new_state), self.last_eval_seconds = self._timed(
-                fn, params, self._halo_state)
+                impl, params, self._halo_state, *res)
+            out, self.last_eval_seconds = self._timed(
+                fn, params, self._halo_state, *res)
+            if comp:
+                micro, preds, new_state, new_res = out
+                self._halo_residual = new_res
+            else:
+                micro, preds, new_state = out
             self._halo_tick(plan, new_state)
+            return micro, preds
+        if comp:
+            if self.mode == "spmd":
+                impl = lambda prm, r: self._eval_spmd_comp(
+                    prm, r, split, per_partition_params)
+            else:
+                impl = lambda prm, r: self._eval_stacked_comp(
+                    prm, r, split, per_partition_params)
+            fn = self._compiled(f"eval-{split}-{per_partition_params}",
+                                impl, params, self._halo_residual)
+            (micro, preds, new_res), self.last_eval_seconds = self._timed(
+                fn, params, self._halo_residual)
+            self._halo_residual = new_res
+            self.last_halo_exchange_bytes = (self.model.num_layers
+                                             * self.halo_wire_bytes_per_layer)
             return micro, preds
         if self.mode == "spmd":
             impl = lambda prm: self._eval_spmd(prm, split, per_partition_params)

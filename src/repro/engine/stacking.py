@@ -21,7 +21,7 @@ from ..kernels.segment_agg import (BEC, BN, build_edge_blocks,
 
 __all__ = ["StackedBlocks", "build_stacked_vjp_blocks",
            "build_stacked_split_vjp_blocks", "build_stacked_halo_cache",
-           "stack_pytrees"]
+           "build_stacked_halo_residual", "stack_pytrees"]
 
 
 def build_stacked_halo_cache(pg: PartitionedGraph,
@@ -41,6 +41,24 @@ def build_stacked_halo_cache(pg: PartitionedGraph,
     P = pg.num_parts
     max_s = pg.send_idx.shape[-1]
     return {f"h{i}": np.zeros((P, P, max_s, d), dtype=np.float32)
+            for i, d in enumerate(layer_dims)}
+
+
+def build_stacked_halo_residual(pg: PartitionedGraph,
+                                layer_dims: tuple[int, ...]) -> dict:
+    """Zero-initialised error-feedback residual for the quantized halo
+    exchange (DESIGN.md §11), stacked ``(P, ...)`` like the halo cache.
+
+    Per partition, ``r{i}`` holds layer i's SEND-side quantization error in
+    send-list layout ``(P, maxS, D_layer)`` — ``r{i}[q, s]`` is the error
+    left behind the last time send slot s's row was quantized for peer q.
+    Zero is the exact empty state: before the first exchange nothing has
+    been rounded away, and pad slots (``send_mask == 0``) are kept zero by
+    the masked residual update so they never leak into the trash row.
+    """
+    P = pg.num_parts
+    max_s = pg.send_idx.shape[-1]
+    return {f"r{i}": np.zeros((P, P, max_s, d), dtype=np.float32)
             for i, d in enumerate(layer_dims)}
 
 

@@ -46,6 +46,8 @@ from .sage import GraphSAGE, SAGEParams
 __all__ = ["PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
            "make_overlap_forward", "make_cached_forward", "make_export_forward",
            "halo_refresh_plan", "RecomputePlanner",
+           "HALO_COMPRESS_MODES", "quantize_rows", "dequantize_rows",
+           "wire_row_bytes",
            "make_ref_mean_agg", "make_pallas_mean_agg",
            "make_ref_split_agg", "make_pallas_split_agg"]
 
@@ -339,6 +341,87 @@ def _halo_exchange(h, send_idx, send_mask, recv_pos, axis_name: str,
     return h.at[flat_pos].set(flat_val.astype(h.dtype))
 
 
+# ---------------------------------------------------------------------------
+# wire codecs (compressed communication)
+# ---------------------------------------------------------------------------
+
+HALO_COMPRESS_MODES = ("none", "fp16", "int8")
+
+
+def quantize_rows(x, mode: str):
+    """Quantize ``x`` (..., D) row-wise -> ``(payload, scale)``.
+
+    ``fp16``  plain downcast, no side channel (scale is None).
+    ``int8``  symmetric per-row scale ``max(|row|) / 127``: payload is int8
+              in [-127, 127], scale travels as one float32 per row.  An
+              all-zero row quantizes to (0, scale 0) and dequantizes to
+              exact zeros — the property that keeps pad slots (and through
+              them the trash row) clean across a compressed exchange.
+
+    All arithmetic runs in ``x``'s dtype, so under ``jax_enable_x64`` the
+    sequential fp64 oracle models the engine's quantization EXACTLY.
+    """
+    if mode == "fp16":
+        return x.astype(jnp.float16), None
+    if mode == "int8":
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = amax / x.dtype.type(127.0)
+        safe = jnp.where(scale > 0, scale, jnp.ones_like(scale))
+        q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+        return q, scale.astype(jnp.float32)
+    raise ValueError(f"unknown halo compression mode {mode!r} "
+                     f"(expected one of {HALO_COMPRESS_MODES[1:]})")
+
+
+def dequantize_rows(payload, scale, mode: str, dtype):
+    """Inverse of :func:`quantize_rows` into ``dtype``.  Deterministic and
+    elementwise, so sender-side (error feedback) and receiver-side
+    dequantization of the same payload are bitwise identical."""
+    if mode == "fp16":
+        return payload.astype(dtype)
+    if mode == "int8":
+        return payload.astype(dtype) * scale.astype(dtype)
+    raise ValueError(f"unknown halo compression mode {mode!r}")
+
+
+def wire_row_bytes(d: int, mode: str, itemsize: int = 4) -> int:
+    """Bytes ONE exchanged embedding row of width ``d`` occupies on the
+    wire: the uncompressed row is ``d * itemsize``, fp16 halves it, int8
+    ships one byte per element plus the row's float32 scale."""
+    if mode == "none":
+        return d * itemsize
+    if mode == "fp16":
+        return d * 2
+    if mode == "int8":
+        return d + 4
+    raise ValueError(f"unknown halo compression mode {mode!r}")
+
+
+def _ef_quantized_exchange(sent, mask3, residual, mode: str, axis_name: str,
+                           ring_chunks: int, out_dtype):
+    """Error-compensated quantized exchange of an already-gathered send
+    buffer.  Returns ``(recv, new_residual)``:
+
+      sent_ef = (sent + residual) * mask        # carry last round's error
+      payload = quantize(sent_ef)               # what goes on the wire
+      new_residual = (sent_ef - dequant(payload)) * mask
+      recv = dequant(exchange(payload))         # landed at the receiver
+
+    Quantization happens BEFORE the collective, so the all_to_all and the
+    chunked ppermute ring move bit-identical payload buffers — compression
+    and schedule compose freely.  The int8 per-row scales travel as a
+    second (tiny) collective over the same schedule.
+    """
+    sent_ef = (sent + residual.astype(sent.dtype)) * mask3
+    payload, scale = quantize_rows(sent_ef, mode)
+    deq = dequantize_rows(payload, scale, mode, sent.dtype)
+    new_residual = ((sent_ef - deq) * mask3).astype(residual.dtype)
+    recv_p = _exchange(payload, axis_name, ring_chunks)
+    recv_s = (None if scale is None
+              else _exchange(scale, axis_name, ring_chunks))
+    return dequantize_rows(recv_p, recv_s, mode, out_dtype), new_residual
+
+
 def halo_refresh_plan(age: int, refresh_every: int, cv: bool,
                       max_send: int) -> tuple[int, int]:
     """Static send-slot range ``[lo, hi)`` the next cached forward refreshes.
@@ -466,7 +549,8 @@ def make_pallas_split_agg(own_cap: int, *, interpret: bool = True):
 # ---------------------------------------------------------------------------
 
 def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
-                             axis_name: str = "data", agg=None):
+                             axis_name: str = "data", agg=None,
+                             compress: str = "none", ring_chunks: int = 0):
     """Build the per-shard n-layer SYNCHRONOUS forward with halo exchange.
 
     Returns ``fwd(params, shard) -> logits`` where ``shard`` is the
@@ -480,31 +564,62 @@ def make_distributed_forward(model: GraphSAGE, pg_meta: dict,
     default is the jnp segment-op reference, the SPMD engine passes
     :func:`make_pallas_mean_agg` to put the Pallas kernel on the hot path.
 
+    ``compress`` (DESIGN.md §11): ``"none"`` returns EXACTLY the forward
+    above — the same closure, no extra arguments, so compression off is
+    bit-for-bit today's trace by construction.  ``"fp16"``/``"int8"``
+    return the error-compensated quantized variant
+    ``fwd(params, shard, residual) -> (logits, new_residual)`` where
+    ``residual["r{i}"]`` is layer i's carried send-side quantization error
+    (same (P, maxS, D_i) geometry as the send lists); ``ring_chunks``
+    selects the exchange schedule for the quantized payloads (the
+    uncompressed forward keeps its all_to_all spelling untouched).
+
     Every layer's exchange fully serialises before any aggregation — the
     baseline :func:`make_overlap_forward` is benchmarked against.
     """
     max_nodes = pg_meta["max_nodes"]
     mean_agg = agg if agg is not None else make_ref_mean_agg(max_nodes)
 
-    def fwd(params: SAGEParams, shard: dict) -> jnp.ndarray:
+    if compress == "none":
+        def fwd(params: SAGEParams, shard: dict) -> jnp.ndarray:
+            h = shard["features"]
+            last = len(params.layers) - 1
+            for i, lp in enumerate(params.layers):
+                h = _halo_exchange(h, shard["send_idx"], shard["send_mask"],
+                                   shard["recv_pos"], axis_name)
+                a = mean_agg(h, shard)
+                h = h @ lp.w_self + a @ lp.w_neigh + lp.b
+                if i < last:
+                    h = jax.nn.relu(h)
+            return h
+
+        return fwd
+
+    def fwd_c(params: SAGEParams, shard: dict, residual: dict):
         h = shard["features"]
+        mask3 = shard["send_mask"][..., None]
         last = len(params.layers) - 1
+        new_res = {}
         for i, lp in enumerate(params.layers):
-            h = _halo_exchange(h, shard["send_idx"], shard["send_mask"],
-                               shard["recv_pos"], axis_name)
+            sent = h[shard["send_idx"]] * mask3
+            recv, new_res[f"r{i}"] = _ef_quantized_exchange(
+                sent, mask3, residual[f"r{i}"], compress, axis_name,
+                ring_chunks, h.dtype)
+            h = h.at[shard["recv_pos"].reshape(-1)].set(
+                recv.reshape(-1, h.shape[-1]).astype(h.dtype))
             a = mean_agg(h, shard)
             h = h @ lp.w_self + a @ lp.w_neigh + lp.b
             if i < last:
                 h = jax.nn.relu(h)
-        return h
+        return h, new_res
 
-    return fwd
+    return fwd_c
 
 
 def make_cached_forward(model: GraphSAGE, pg_meta: dict,
                         axis_name: str = "data", agg=None,
                         refresh_lo: int = 0, refresh_hi: int | None = None,
-                        ring_chunks: int = 0):
+                        ring_chunks: int = 0, compress: str = "none"):
     """Build the per-shard n-layer forward against a HISTORICAL halo cache.
 
     Returns ``fwd(params, shard, cache) -> (logits, new_cache)`` where
@@ -528,40 +643,71 @@ def make_cached_forward(model: GraphSAGE, pg_meta: dict,
 
     Cached halo rows enter aggregation as constants (no VJP through past
     epochs), which is the VR-GCN historical-activation semantics.
+
+    ``compress != "none"`` quantizes the REFRESH payload (the ``[lo, hi)``
+    slice) with error feedback on the matching residual slot slice; the
+    cache stores the DEQUANTIZED rows, so cached aggregation math is
+    untouched.  The signature gains the residual:
+    ``fwd(params, shard, cache, residual) -> (logits, new_cache,
+    new_residual)``.  ``compress == "none"`` keeps today's closure and
+    signature bit-for-bit.
     """
     max_nodes = pg_meta["max_nodes"]
     mean_agg = agg if agg is not None else make_ref_mean_agg(max_nodes)
     lo = int(refresh_lo)
 
-    def land_and_refresh(h, shard, cached):
+    def land_and_refresh(h, shard, cached, res=None):
         hi = shard["send_idx"].shape[-1] if refresh_hi is None else refresh_hi
         full = lo == 0 and hi == shard["send_idx"].shape[-1]
         if hi > lo:
-            sent = (h[shard["send_idx"][:, lo:hi]]
-                    * shard["send_mask"][:, lo:hi][..., None])
+            # gather (and, compressed, quantize) BEFORE any cache landing:
+            # send_idx only ever points at owned rows, and keeping the order
+            # is what preserves today's trace for compress == "none"
+            mask3 = shard["send_mask"][:, lo:hi][..., None]
+            sent = h[shard["send_idx"][:, lo:hi]] * mask3
         if not full:
             h = h.at[shard["recv_pos"].reshape(-1)].set(
                 cached.reshape(-1, h.shape[-1]).astype(h.dtype))
         if hi > lo:
-            recv = _exchange(sent, axis_name, ring_chunks)
+            if res is None:
+                recv = _exchange(sent, axis_name, ring_chunks)
+            else:
+                recv, new_r = _ef_quantized_exchange(
+                    sent, mask3, res[:, lo:hi], compress, axis_name,
+                    ring_chunks, h.dtype)
+                res = res.at[:, lo:hi].set(new_r)
             h = h.at[shard["recv_pos"][:, lo:hi].reshape(-1)].set(
                 recv.reshape(-1, h.shape[-1]).astype(h.dtype))
             cached = cached.at[:, lo:hi].set(recv.astype(cached.dtype))
-        return h, cached
+        return h, cached, res
 
     def fwd(params: SAGEParams, shard: dict, cache: dict):
         h = shard["features"]
         last = len(params.layers) - 1
         new_cache = {}
         for i, lp in enumerate(params.layers):
-            h, new_cache[f"h{i}"] = land_and_refresh(h, shard, cache[f"h{i}"])
+            h, new_cache[f"h{i}"], _ = land_and_refresh(h, shard,
+                                                        cache[f"h{i}"])
             a = mean_agg(h, shard)
             h = h @ lp.w_self + a @ lp.w_neigh + lp.b
             if i < last:
                 h = jax.nn.relu(h)
         return h, new_cache
 
-    return fwd
+    def fwd_c(params: SAGEParams, shard: dict, cache: dict, residual: dict):
+        h = shard["features"]
+        last = len(params.layers) - 1
+        new_cache, new_res = {}, {}
+        for i, lp in enumerate(params.layers):
+            h, new_cache[f"h{i}"], new_res[f"r{i}"] = land_and_refresh(
+                h, shard, cache[f"h{i}"], residual[f"r{i}"])
+            a = mean_agg(h, shard)
+            h = h @ lp.w_self + a @ lp.w_neigh + lp.b
+            if i < last:
+                h = jax.nn.relu(h)
+        return h, new_cache, new_res
+
+    return fwd if compress == "none" else fwd_c
 
 
 def make_overlap_forward(model: GraphSAGE, pg_meta: dict,
@@ -685,9 +831,14 @@ class RecomputePlanner:
     stored dst-major per partition; the planner holds the src-major CSC
     mirror of the same local edge lists).  Rows whose IN-EDGES changed are
     seeded at layer 1 and carried forward by the self term.  Edge removals
-    deliberately leave the planner adjacency untouched: stale out-edges can
-    only over-propagate (recompute a clean row to the same value), never
-    under-propagate, so correctness needs no CSC deletion.
+    are only RECORDED at first: stale out-edges can only over-propagate
+    (recompute a clean row to the same value), never under-propagate, so
+    correctness needs no eager CSC deletion.  Once a partition accumulates
+    ``compact_after`` recorded removals the planner compacts — rebuilds
+    that shard's CSC from (static minus removed) plus the dynamically
+    added edges — so long-running serving with heavy churn stops paying
+    for dirty cones through edges that no longer exist.  :meth:`compact`
+    forces the rebuild on demand.
 
     The replica map comes from the send/recv lists: owner p's local row
     ``send_idx[p, q, s]`` has a halo copy at q's ``recv_pos[q, p, s]``.
@@ -695,9 +846,11 @@ class RecomputePlanner:
     :meth:`add_replica` / :meth:`add_out_edge`.
     """
 
-    def __init__(self, pg: PartitionedGraph):
+    def __init__(self, pg: PartitionedGraph, *, compact_after: int = 64):
         P = pg.num_parts
         self.num_parts = P
+        self.compact_after = int(compact_after)
+        self.compactions = 0
         self.n_own = np.asarray(pg.n_own).copy()
         self._csc = []
         for p in range(P):
@@ -712,6 +865,8 @@ class RecomputePlanner:
             self._csc.append((ptr, dst[order]))
         # dynamically added out-edges (src_local -> [dst_local]) per part
         self._extra_out: list[dict[int, list[int]]] = [{} for _ in range(P)]
+        # removals recorded against the static CSC, pending compaction
+        self._removed: list[set[tuple[int, int]]] = [set() for _ in range(P)]
         # replica lists: owner p's local row -> [(peer q, q's halo row)]
         self._rep: list[dict[int, list[tuple[int, int]]]] = [{} for _ in range(P)]
         send_idx = np.asarray(pg.send_idx)
@@ -729,6 +884,59 @@ class RecomputePlanner:
 
     def add_replica(self, owner: int, row: int, peer: int, peer_row: int) -> None:
         self._rep[owner].setdefault(int(row), []).append((peer, int(peer_row)))
+
+    def remove_out_edge(self, p: int, src_local: int, dst_local: int) -> None:
+        """Record the removal of local edge src -> dst on partition p.
+
+        A dynamically added edge is deleted in place; a static-CSC edge is
+        only logged (stale until the next compaction, which is safe — it
+        over-propagates).  Hitting ``compact_after`` pending removals
+        triggers an automatic compaction of that partition's shard.
+        """
+        src_local, dst_local = int(src_local), int(dst_local)
+        extra = self._extra_out[p].get(src_local)
+        if extra is not None and dst_local in extra:
+            extra.remove(dst_local)
+            if not extra:
+                del self._extra_out[p][src_local]
+            return
+        self._removed[p].add((src_local, dst_local))
+        if len(self._removed[p]) >= self.compact_after:
+            self._compact(p)
+
+    def compact(self, p: int | None = None) -> None:
+        """Force-rebuild the CSC shard(s) so every recorded removal and
+        dynamic addition is folded into the static adjacency."""
+        for q in ([p] if p is not None else range(self.num_parts)):
+            if self._removed[q] or self._extra_out[q]:
+                self._compact(int(q))
+
+    def _compact(self, p: int) -> None:
+        ptr, dst = self._csc[p]
+        n_static = len(ptr) - 1
+        src = np.repeat(np.arange(n_static, dtype=np.int64), np.diff(ptr))
+        removed = self._removed[p]
+        if removed:
+            keep = np.fromiter(((int(s), int(d)) not in removed
+                                for s, d in zip(src, dst)), bool, src.size)
+            src, dst = src[keep], dst[keep]
+        ex_src: list[int] = []
+        ex_dst: list[int] = []
+        for s, lst in self._extra_out[p].items():
+            ex_src.extend([int(s)] * len(lst))
+            ex_dst.extend(int(d) for d in lst)
+        if ex_src:
+            src = np.concatenate([src, np.asarray(ex_src, np.int64)])
+            dst = np.concatenate([dst, np.asarray(ex_dst, np.int64)])
+        n_rows = max(n_static, int(src.max()) + 1 if src.size else 0)
+        counts = np.bincount(src, minlength=n_rows)
+        new_ptr = np.zeros(n_rows + 1, np.int64)
+        np.cumsum(counts, out=new_ptr[1:])
+        order = np.argsort(src, kind="stable")
+        self._csc[p] = (new_ptr, dst[order])
+        self._extra_out[p] = {}
+        self._removed[p].clear()
+        self.compactions += 1
 
     # -------------------------------------------------------------- queries
     def replicas(self, p: int, rows: np.ndarray):

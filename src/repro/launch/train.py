@@ -69,6 +69,10 @@ def run_gnn(args) -> dict:
         halo_cache=args.halo_cache,
         halo_refresh_every=args.halo_refresh_every,
         halo_cv=args.halo_cv,
+        halo_compress=args.halo_compress,
+        grad_compress=args.grad_compress,
+        grad_topk_frac=args.grad_topk_frac,
+        grad_bucket_kb=args.grad_bucket_kb,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
         keep_checkpoints=args.keep_checkpoints,
@@ -211,6 +215,21 @@ def main() -> int:
                         "refresh a rotating 1/(K-1) chunk of the send "
                         "slots instead of going fully stale between "
                         "full refreshes")
+    g.add_argument("--halo-compress", default="none",
+                   choices=("none", "fp16", "int8"),
+                   help="quantize the eval forwards' halo exchange payload "
+                        "(error-compensated per-row codec; composes with "
+                        "--halo-cache and --ring-chunks, DESIGN.md §11)")
+    g.add_argument("--grad-compress", default="none",
+                   choices=("none", "bucketed", "topk"),
+                   help="phase-0 gradient all-reduce spelling: bucketed "
+                        "ring-psum slices, or top-k sparsification with "
+                        "error feedback (DESIGN.md §11)")
+    g.add_argument("--grad-topk-frac", type=float, default=0.01,
+                   help="fraction of gradient entries --grad-compress=topk "
+                        "ships per sync")
+    g.add_argument("--grad-bucket-kb", type=int, default=512,
+                   help="slice size of the bucketed gradient all-reduce")
     g.add_argument("--no-interpret", action="store_true",
                    help="run Pallas kernels compiled (real TPU) instead of "
                         "interpret mode; pair with --engine spmd on a mesh")

@@ -70,6 +70,7 @@ import numpy as np
 
 from .core import (GPController, GPHyperParams, GPScheduleConfig,
                    broadcast_to_partitions, partition_graph)
+from .core.gp.trainer import grad_sync_wire_bytes
 from .core.sampler import (CBSampler, build_device_epoch_sampler,
                            host_draw_count)
 from .engine import (EngineConfig, make_engine, stack_epoch_batches,
@@ -119,6 +120,13 @@ class EATConfig:
     halo_cache: bool = False
     halo_refresh_every: int = 4
     halo_cv: bool = False
+    # compressed communication (DESIGN.md §11): quantized halo exchange on
+    # the eval forwards (error-compensated; composes with the halo cache and
+    # either exchange schedule) and the phase-0 gradient all-reduce spelling
+    halo_compress: str = "none"           # none | fp16 | int8
+    grad_compress: str = "none"           # none | bucketed | topk
+    grad_topk_frac: float = 0.01          # fraction of entries top-k ships
+    grad_bucket_kb: int = 512             # bucketed psum slice size
     interpret: bool = True                # Pallas interpret mode (False on TPU)
     # phase-0 trains FULL-GRAPH instead of sampled minibatches: one (or
     # ``full_graph_iters``) full-batch value_and_grad step(s) per epoch
@@ -233,6 +241,8 @@ class EATResult:
             "halo_cache": self.config.halo_cache,
             "halo_refresh_every": self.config.halo_refresh_every,
             "halo_cv": self.config.halo_cv,
+            "halo_compress": self.config.halo_compress,
+            "grad_compress": self.config.grad_compress,
             "comm_halo_exchange_mb": round(
                 self.comm_halo_exchange_bytes / 1e6, 3),
             "phase1_time_s": round(self.phase1_time_s, 3),
@@ -262,10 +272,6 @@ class EATResult:
         if c.use_cbs:
             mods.append("CBS")
         return "+".join(mods)
-
-
-def _param_bytes(params) -> int:
-    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
 
 
 class _EpochPrefetcher:
@@ -377,7 +383,11 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
                             fg_loss="focal" if cfg.use_focal else "ce",
                             halo_cache=cfg.halo_cache,
                             halo_refresh_every=cfg.halo_refresh_every,
-                            halo_cv=cfg.halo_cv))
+                            halo_cv=cfg.halo_cv,
+                            halo_compress=cfg.halo_compress,
+                            grad_compress=cfg.grad_compress,
+                            grad_topk_frac=cfg.grad_topk_frac,
+                            grad_bucket_kb=cfg.grad_bucket_kb))
     if verbose:
         print(f"engine[{engine.mode}] {pg.summary()}")
 
@@ -395,7 +405,13 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
 
     params = model.init(cfg.seed)
     opt_state = opt.init(params)
-    grad_bytes_per_sync = _param_bytes(params)
+    # per-sync gradient wire volume, truthful to the sync SPELLING: the
+    # plain all_gather ships P*(P-1) full copies, the bucketed ring 2*(P-1),
+    # top-k only the (value, index) pairs each partition keeps
+    p_leaves = jax.tree_util.tree_leaves(params)
+    grad_bytes_per_sync = grad_sync_wire_bytes(
+        cfg.grad_compress, n_parts, sum(l.size for l in p_leaves),
+        itemsize=p_leaves[0].dtype.itemsize, topk_frac=cfg.grad_topk_frac)
     # cross-partition edges = remote fetch volume per epoch (DistDGL analog)
     src_all = graph.indices
     dst_all = np.repeat(np.arange(graph.num_nodes), np.diff(graph.indptr))
@@ -404,15 +420,16 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
     # of the train nodes, the plain sampler touches all of them
     eff_fraction = cfg.subset_fraction if cfg.use_cbs else 1.0
     fetch_bytes_per_epoch = int(cut_frac * graph.num_edges * graph.feature_dim
-                                * 4 * eff_fraction)
+                                * fdt.itemsize * eff_fraction)
     def eval_exchange_bytes() -> int:
         # the exchange volume THIS epoch's eval forward actually paid: only
         # the refreshed-row payload under the historical halo cache (the
         # engine reports it after each cached forward), the full per-layer
-        # exchange otherwise
+        # WIRE payload (dtype- and compression-truthful) otherwise
         if cfg.halo_cache:
             return int(engine.last_halo_exchange_bytes)
-        return model.num_layers * pg.halo_bytes_per_layer
+        return model.num_layers * int(getattr(
+            engine, "halo_wire_bytes_per_layer", pg.halo_bytes_per_layer))
 
     batch_feats = np.asarray(graph.features, fdt)
 
@@ -524,9 +541,13 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
     # the same send/recv lists), plus the per-epoch validation forward's
     # per-layer exchange — which the sampled path's accounting also counts
     # — and fetch no sampled neighbours
+    # (training exchanges stay uncompressed — only the eval forward's
+    # exchange is quantized, so only its term uses the wire-byte rate)
     fg_halo_bytes_per_epoch = (2 * model.num_layers * pg.halo_bytes_per_layer
                                * cfg.full_graph_iters
-                               + model.num_layers * pg.halo_bytes_per_layer)
+                               + model.num_layers * int(getattr(
+                                   engine, "halo_wire_bytes_per_layer",
+                                   pg.halo_bytes_per_layer)))
 
     host_to_device_p0 = 0
     p0_iter_hist: list[int] = []
@@ -539,11 +560,20 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
     fingerprint = {"dataset": cfg.dataset, "num_parts": n_parts,
                    "method": cfg.partition_method, "seed": cfg.seed,
                    "dtype": cfg.dtype, "engine": engine.mode,
-                   "halo_cache": cfg.halo_cache}
+                   "halo_cache": cfg.halo_cache,
+                   "halo_compress": cfg.halo_compress,
+                   "grad_compress": cfg.grad_compress}
 
     def halo_ckpt_state():
         if cfg.halo_cache and hasattr(engine, "halo_cache_state"):
             return engine.halo_cache_state()
+        return None
+
+    def comm_res_state():
+        # error-feedback residuals are part of the resumable state: dropping
+        # them on resume would re-inject the already-compensated error
+        if hasattr(engine, "comm_residual_state"):
+            return engine.comm_residual_state()
         return None
 
     def make_like(host: dict) -> dict:
@@ -564,6 +594,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
         st = halo_ckpt_state()
         if st is not None:
             like["halo"] = st[0]
+        if host.get("has_halo_res"):
+            like["halo_res"] = engine._halo_residual
+        if host.get("has_grad_res"):
+            like["grad_res"] = engine._grad_residual(params)
         return like
 
     restore_phase1 = None
@@ -592,6 +626,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             if "halo" in arrays:
                 engine.restore_halo_cache_state(arrays["halo"],
                                                 host["halo_age"])
+            if "halo_res" in arrays or "grad_res" in arrays:
+                engine.restore_comm_residual_state(
+                    (arrays.get("halo_res"), arrays.get("grad_res")))
             if host.get("has_phase1"):
                 restore_phase1 = (arrays, host)
             if verbose:
@@ -622,6 +659,15 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
         if st is not None:
             arrays["halo"] = jax.tree.map(np.asarray, st[0])
             host["halo_age"] = int(st[1])
+        cs = comm_res_state()
+        if cs is not None:
+            h_res, g_res = cs
+            if h_res is not None:
+                arrays["halo_res"] = jax.tree.map(np.asarray, h_res)
+            if g_res is not None:
+                arrays["grad_res"] = np.asarray(g_res)
+            host["has_halo_res"] = h_res is not None
+            host["has_grad_res"] = g_res is not None
         if phase1_state:
             arrays.update(
                 global_params=phase1_state["global_params"],
@@ -666,8 +712,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             iters = np.asarray(losses).shape[0]
             t_host = np.zeros(n_parts)      # no host sampling on this path
             comm_halo_p0 += fg_halo_bytes_per_epoch
-            halo_exchange_hist.append(model.num_layers
-                                      * pg.halo_bytes_per_layer)
+            halo_exchange_hist.append(eval_exchange_bytes())
         elif async_phase0:
             # one device program per epoch: draw + train scan + fused eval.
             # The only host→device payload is the per-partition PRNG keys.
@@ -691,7 +736,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             ex = eval_exchange_bytes()
             halo_exchange_hist.append(ex)
             comm_halo_p0 += ex + fetch_bytes_per_epoch
-        comm_grad += grad_bytes_per_sync * n_parts * iters
+        comm_grad += grad_bytes_per_sync * iters
         p0_iter_hist.append(int(iters))
         host_time = epoch_host_times(t_host, t_dev)
         if delay is not None:

@@ -28,9 +28,12 @@ partition layout:
     from-scratch forward bit-for-bit in fp64 (tests/test_serve_gnn.py).
 
   · **Query batching tick.**  Queries accumulate in :meth:`submit`;
-    each :meth:`tick` flushes pending recomputes once, then groups the
-    queued node ids by owning partition and serves each group with ONE
-    fused device gather from that partition's logits store.
+    each :meth:`tick` flushes pending recomputes once, answers repeat
+    queries from an LRU hot-row cache (flush invalidates exactly the
+    recomputed final-layer rows, so hits are bitwise the store row; hit /
+    miss counts land in ``stats``), then groups the remaining node ids by
+    owning partition and serves each group with ONE fused device gather
+    from that partition's logits store.
 
 Staleness contract: reads between ``tick``/``flush`` calls serve the
 last flushed state; a flush makes every preceding update visible
@@ -100,7 +103,8 @@ class GNNServingEngine:
     """
 
     def __init__(self, model, params, pg: PartitionedGraph, export: dict, *,
-                 use_pallas_agg: bool = False, interpret: bool = True):
+                 use_pallas_agg: bool = False, interpret: bool = True,
+                 hot_cache_rows: int = 256, planner_compact_after: int = 64):
         if len(params.layers) != model.num_layers:
             raise ValueError("params depth != model.num_layers")
         self.model = model
@@ -159,15 +163,24 @@ class GNNServingEngine:
                                 copy=True) for p in range(P)])
         self.dtype = self.h[0][0].dtype
 
-        self.planner = RecomputePlanner(pg)
+        self.planner = RecomputePlanner(pg,
+                                        compact_after=planner_compact_after)
         self._dirty0: list[set[int]] = [set() for _ in range(P)]
         self._edge_seeds: list[set[int]] = [set() for _ in range(P)]
         self._pending: list[int] = []
+        # hot-row query cache: gid -> last served logit row, LRU up to
+        # hot_cache_rows entries.  Entries are invalidated whenever a flush
+        # recomputes that row's final-layer store, so a hit is always
+        # bitwise the store row the gather path would have returned.
+        self.hot_cache_rows = int(hot_cache_rows)
+        self._hot: dict[int, np.ndarray] = {}
         self.stats = {"ticks": 0, "flushes": 0, "rows_recomputed": 0,
                       "gather_calls": 0, "queries": 0, "halo_rows_grown": 0,
                       "updates_queued": 0, "replay_attempts": 0,
                       "replayed": 0, "degraded_queries": 0,
-                      "failovers": 0, "recoveries": 0}
+                      "failovers": 0, "recoveries": 0,
+                      "cache_hits": 0, "cache_misses": 0,
+                      "planner_compactions": 0}
 
         # ---- per-partition health state machine (DESIGN.md §10) ----------
         # healthy -> failed (fail_partition / an injected serve fault) ->
@@ -256,8 +269,9 @@ class GNNServingEngine:
 
     def remove_edge(self, u: int, v: int) -> bool:
         """Remove directed edge u -> v; returns False if absent.  The
-        planner's adjacency keeps the stale out-edge (over-propagation is
-        always safe); only the aggregation list shrinks."""
+        removal is recorded with the planner, which keeps the stale
+        out-edge until its per-partition compaction threshold (stale
+        over-propagation is always safe; compaction stops paying for it)."""
         u, v = int(u), int(v)
         if self._should_queue_edge(u, v, adding=False):
             self._queue.append(("remove", u, v))
@@ -270,8 +284,10 @@ class GNNServingEngine:
         if (pos >= len(self.nbr_gid[p][vrow])
                 or self.nbr_gid[p][vrow][pos] != u):
             return False
+        urow = int(self.nbr_loc[p][vrow][pos])
         self.nbr_gid[p][vrow] = np.delete(self.nbr_gid[p][vrow], pos)
         self.nbr_loc[p][vrow] = np.delete(self.nbr_loc[p][vrow], pos)
+        self.planner.remove_out_edge(p, urow, vrow)
         self._edge_seeds[p].add(vrow)
         return True
 
@@ -318,6 +334,7 @@ class GNNServingEngine:
         dirty set one hop per layer, recompute exactly those owned rows,
         and mirror refreshed rows to their halo replicas between layers."""
         if (not any(self._dirty0) and not any(self._edge_seeds)):
+            self.stats["planner_compactions"] = self.planner.compactions
             return {"rows_recomputed": 0, "per_layer": [0] * self.L}
         P = self.num_parts
         plans = self.planner.propagate(
@@ -337,12 +354,19 @@ class GNNServingEngine:
                 for p in range(P):
                     for q, qrow, r in self.planner.replicas(p, rec[p]):
                         self.h[l][q][qrow] = self.h[l][p][r]
+            else:
+                # final-layer rows changed: their hot-cache entries are stale
+                if self._hot:
+                    for p in range(P):
+                        for r in rec[p]:
+                            self._hot.pop(int(self.l2g[p][r]), None)
             per_layer.append(cnt)
             total += cnt
         self._dirty0 = [set() for _ in range(P)]
         self._edge_seeds = [set() for _ in range(P)]
         self.stats["flushes"] += 1
         self.stats["rows_recomputed"] += total
+        self.stats["planner_compactions"] = self.planner.compactions
         return {"rows_recomputed": total, "per_layer": per_layer}
 
     def refresh_full(self) -> dict:
@@ -502,7 +526,14 @@ class GNNServingEngine:
         staleness: dict[int, int] = {}
         by_part: dict[int, list[int]] = {}
         for gid in self._pending:
-            by_part.setdefault(int(self.owner_part[gid]), []).append(gid)
+            p = int(self.owner_part[gid])
+            hot = self._hot.get(gid) if self.health[p] == "healthy" else None
+            if hot is not None:
+                self._hot[gid] = self._hot.pop(gid)    # LRU touch
+                results[gid] = hot
+                self.stats["cache_hits"] += 1
+                continue
+            by_part.setdefault(p, []).append(gid)
         for p, gids in by_part.items():
             rows = self.owner_row[np.asarray(gids, np.int64)]
             mp = _bucket(len(rows), lo=1)
@@ -511,14 +542,20 @@ class GNNServingEngine:
             out = np.asarray(_gather(jnp.asarray(self.h[self.L][p]),
                                      jnp.asarray(rp)))[: len(rows)]
             self.stats["gather_calls"] += 1
+            self.stats["cache_misses"] += len(gids)
             degraded = self.health[p] != "healthy"
             age = self._tick_no - self._failed_since[p] if degraded else 0
             for g, logit_row in zip(gids, out):
                 results[g] = logit_row
                 if degraded:
                     staleness[g] = age
+                elif self.hot_cache_rows > 0:
+                    self._hot.pop(g, None)
+                    self._hot[g] = logit_row
             if degraded:
                 self.stats["degraded_queries"] += len(gids)
+            while len(self._hot) > self.hot_cache_rows:
+                self._hot.pop(next(iter(self._hot)))
         self.stats["queries"] += len(self._pending)
         self.stats["ticks"] += 1
         self._pending.clear()

@@ -35,6 +35,11 @@
    comm counters report only the refreshed-row payload (CV chunks partition
    one full exchange); the pure-cached spmd program lowers with no
    all_to_all at all.
+9. Compressed communication (PR-9): error-compensated fp16/int8 halo
+   quantization and bucketed/top-k gradient reduction each match the
+   sequential fp64 oracle bit-for-bit (the oracle models the quantize /
+   dequantize / residual arithmetic exactly); compress=off stays bitwise
+   the pre-PR-9 forward; ring schedules and the halo cache compose.
 
 Flaky-surface hardening: ALL fast fp64 checks (1–3) share ONE subprocess
 per module (one interpreter + one set of XLA compilations), and every
@@ -418,6 +423,85 @@ def run_halo_cache_async_parity(pg, g, host_train, model, loss_fn, opt,
     return {"async_cached": d, "async_cached_bytes": float(b)}
 
 
+def run_comm_compress_parity(pg, model, loss_fn, opt, samplers, make_batch,
+                             seed, dtype):
+    '''Compressed communication parity (the PR-9 tentpole):
+      1. compressed phase-0 gradient reduction (bucketed psum spelling and
+         top-k EF sparsification): compressed stacked engine == the
+         sequential fp64 oracle bit-for-bit on SHARED drawn batches, and
+         stacked bucketed == plain mode-none params bitwise;
+      2. quantized halo eval (fp16 / int8 with carried residual feedback):
+         engine eval sequence == oracle bitwise with equal byte counters,
+         strictly below the uncompressed wire size; compress=off reports
+         EXACTLY pg.halo_bytes_per_layer per layer (the pre-PR-9 lock);
+      3. the chunked ppermute ring moves bit-identical compressed payloads
+         (quantization happens BEFORE the collective);
+      4. int8 composes with the PR-6 halo cache: refresh payloads quantize,
+         the cache stores dequantized rows, engine == oracle bitwise.'''
+    kw = dict(mode="stacked", use_pallas_agg=False, dtype=dtype)
+    mk = lambda cls, **o: cls(model, loss_fn, opt, pg, GPHyperParams(),
+                              EngineConfig(**kw, **o))
+    out = {}
+    base = jax.tree.map(lambda x: jnp.asarray(x, dtype), model.init(seed))
+    opt_state = opt.init(base)
+    b0, _, _ = stack_epoch_batches(samplers, make_batch, P)
+    pN, _, _, _, _ = mk(SPMDEngine).phase0_epoch(base, opt_state, b0)
+    for gmode in ("bucketed", "topk"):
+        eng = mk(SPMDEngine, grad_compress=gmode, grad_bucket_kb=1)
+        seq = mk(SequentialReference, grad_compress=gmode, grad_bucket_kb=1)
+        pA, oA, lA, vA, _ = eng.phase0_epoch(base, opt_state, b0)
+        pB, oB, lB, vB, _ = seq.phase0_epoch(base, opt_state, b0)
+        out[f"{gmode}_params"] = tree_maxdiff(pA, pB)
+        out[f"{gmode}_opt"] = tree_maxdiff(oA, oB)
+        out[f"{gmode}_loss"] = float(np.abs(np.asarray(lA)
+                                            - np.asarray(lB)).max())
+        out[f"{gmode}_val"] = float(np.abs(np.asarray(vA)
+                                           - np.asarray(vB)).max())
+        if gmode == "bucketed":
+            out["bucketed_vs_none"] = tree_maxdiff(pA, pN)
+
+    pseq = [jax.tree.map(lambda x: x * (1.0 + 0.05 * i), base)
+            for i in range(3)]
+    full = model.num_layers * pg.halo_bytes_per_layer
+    out["none_wire_eq_pg"] = float(
+        mk(SPMDEngine).halo_wire_bytes_per_layer != pg.halo_bytes_per_layer)
+    for hmode in ("fp16", "int8"):
+        eng = mk(SPMDEngine, halo_compress=hmode)
+        seq = mk(SequentialReference, halo_compress=hmode)
+        ring = mk(SPMDEngine, halo_compress=hmode, ring_chunks=3)
+        d = ringd = bad_bytes = 0.0
+        for prm in pseq:
+            mA, prA = eng.evaluate(prm, "val", per_partition_params=False)
+            mB, prB = seq.evaluate(prm, "val", per_partition_params=False)
+            mR, prR = ring.evaluate(prm, "val", per_partition_params=False)
+            d = max(d, float(jnp.abs(mA - mB).max()),
+                    float((np.asarray(prA) != np.asarray(prB)).sum()))
+            ringd = max(ringd, float(jnp.abs(mA - mR).max()),
+                        float((np.asarray(prA) != np.asarray(prR)).sum()))
+            bad_bytes += int(eng.last_halo_exchange_bytes
+                             != seq.last_halo_exchange_bytes)
+            bad_bytes += int(not (0 < eng.last_halo_exchange_bytes < full))
+        out[f"{hmode}_eval"] = d
+        out[f"{hmode}_ring"] = ringd
+        out[f"{hmode}_bytes"] = bad_bytes
+
+    engC = mk(SPMDEngine, halo_compress="int8", halo_cache=True,
+              halo_refresh_every=2)
+    seqC = mk(SequentialReference, halo_compress="int8", halo_cache=True,
+              halo_refresh_every=2)
+    d = bad_bytes = 0.0
+    for prm in pseq + pseq[:1]:
+        mA, prA = engC.evaluate(prm, "val", per_partition_params=False)
+        mB, prB = seqC.evaluate(prm, "val", per_partition_params=False)
+        d = max(d, float(jnp.abs(mA - mB).max()),
+                float((np.asarray(prA) != np.asarray(prB)).sum()))
+        bad_bytes += int(engC.last_halo_exchange_bytes
+                         != seqC.last_halo_exchange_bytes)
+    out["cached_int8"] = d
+    out["cached_int8_bytes"] = bad_bytes
+    return out
+
+
 def run_async_parity(eng, seq, g, host_train, model, opt, seed, dtype):
     '''Fully-on-device phase-1 (device CBS draw + fanout + gather inside the
     fused step) vs the sequential reference running the SAME PRNG programs.'''
@@ -482,6 +566,9 @@ out["halo_cache"] = run_halo_cache_parity(pg, model, loss_fn, opt, 0,
 out["halo_cache_async"] = run_halo_cache_async_parity(pg, g, host_train,
                                                       model, loss_fn, opt, 0,
                                                       jnp.float64)
+out["comm_compress"] = run_comm_compress_parity(pg, model, loss_fn, opt,
+                                                samplers, make_batch, 0,
+                                                jnp.float64)
 print("RESULTS", json.dumps(out))
 """
 )
@@ -563,6 +650,18 @@ def test_fullgraph_train_parity_fp64(fp64_shared):
         fp64_shared["fullgraph"]
     assert all(v == 0 for v in fp64_shared["fullgraph_overlap"].values()), \
         fp64_shared["fullgraph_overlap"]
+
+
+def test_comm_compress_parity_fp64(fp64_shared):
+    """PR-9: quantized halo exchange (fp16/int8 with error feedback) and
+    compressed gradient reduction (bucketed/top-k) match the sequential
+    fp64 oracle bit-for-bit; stacked bucketed == mode none; the ppermute
+    ring moves bit-identical compressed payloads; int8 composes with the
+    halo cache; byte counters agree, stay positive, and sit strictly below
+    the uncompressed wire size (compress=off reports exactly the old
+    accounting)."""
+    assert all(v == 0 for v in fp64_shared["comm_compress"].values()), \
+        fp64_shared["comm_compress"]
 
 
 # --------------------------------------------------------------------------

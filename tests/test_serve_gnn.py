@@ -95,7 +95,8 @@ cfg = EngineConfig(mode="stacked", use_pallas_agg=False, dtype=jnp.float64)
 eng = SPMDEngine(model, model.make_loss_fn(), AdamW(lr=1e-3), pg,
                  GPHyperParams(), cfg)
 prm = jax.tree.map(lambda x: jnp.asarray(x, jnp.float64), model.init(0))
-srv = GNNServingEngine(model, prm, pg, eng.export_serving_state(prm))
+srv = GNNServingEngine(model, prm, pg, eng.export_serving_state(prm),
+                       planner_compact_after=1)
 
 
 def oracle_logits(graph):
@@ -163,6 +164,9 @@ for u, v in rem2:
 srv.flush()
 g3 = apply_updates_to_graph(g2, fupd2, (), rem2)
 assert (srv.export_logits() == oracle_logits(g3)).all(), "round 2 not bitwise"
+# compact_after=1: the static-CSC removal in round 1 compacted eagerly and
+# serving stayed bitwise THROUGH the compaction
+assert srv.planner.compactions >= 1, srv.planner.compactions
 
 # query batching: one fused gather per owning partition, rows match store
 q = [0, 1, 2, 3, 17, 101]
@@ -317,6 +321,91 @@ def test_no_recompile_on_fresh_identically_sharded_inputs():
             lambda x: jnp.asarray(np.asarray(x), x.dtype), prm)
         eng.evaluate(fresh, "val", per_partition_params=False)
     assert eng.compile_count == n0, "identically-sharded inputs recompiled"
+
+
+# --------------------------------------------------------------------------
+# 6. hot-row query cache + planner adjacency compaction (PR-9 satellites)
+# --------------------------------------------------------------------------
+
+def test_hot_row_cache_hits_and_invalidation():
+    """Repeat queries hit the LRU hot-row cache (no extra gathers), a flush
+    that recomputes a row evicts exactly it, and answers always equal the
+    logits store."""
+    from repro.serve import GNNServingEngine
+
+    g, r, pg, model, cfg, eng, prm = _build()
+    srv = GNNServingEngine(model, prm, pg, eng.export_serving_state(prm))
+    q = [0, 5, 9]
+    a = srv.query(q)
+    assert srv.stats["cache_misses"] == len(q)
+    assert srv.stats["cache_hits"] == 0
+
+    before = srv.stats["gather_calls"]
+    b = srv.query(q)
+    assert srv.stats["cache_hits"] == len(q)
+    assert srv.stats["gather_calls"] == before, "cache hit still gathered"
+    assert (a == b).all()
+
+    rng = np.random.default_rng(0)
+    srv.update_features(q[0], rng.normal(0, 1, g.feature_dim)
+                        .astype(np.float32))
+    c = srv.query(q)
+    full = srv.export_logits()
+    assert (c == full[np.asarray(q)]).all(), "cache served a stale row"
+    assert srv.stats["cache_misses"] >= len(q) + 1   # q[0] re-gathered
+
+
+def test_hot_row_cache_lru_capacity():
+    from repro.serve import GNNServingEngine
+
+    g, r, pg, model, cfg, eng, prm = _build()
+    srv = GNNServingEngine(model, prm, pg, eng.export_serving_state(prm),
+                           hot_cache_rows=2)
+    srv.query([0, 5, 9, 42])
+    assert len(srv._hot) == 2
+    # whatever survived the LRU eviction serves as hits, byte-for-byte
+    resident = list(srv._hot)
+    before = srv.stats["cache_hits"]
+    res = srv.query(resident)
+    assert srv.stats["cache_hits"] == before + len(resident)
+    full = srv.export_logits()
+    assert (res == full[np.asarray(resident)]).all()
+
+
+def test_planner_compaction_exact_adjacency():
+    """With compact_after=1 every static-edge removal compacts its shard:
+    the planner's out_rows then equal EXACTLY the adjacency implied by the
+    live aggregation lists (no stale over-propagating out-edges), and the
+    compaction count surfaces in serving stats."""
+    from repro.serve import GNNServingEngine
+
+    g, r, pg, model, cfg, eng, prm = _build()
+    srv = GNNServingEngine(model, prm, pg, eng.export_serving_state(prm),
+                           planner_compact_after=1)
+    removed = []
+    for v in range(g.num_nodes):
+        for u in g.neighbors(v):
+            if u != v:
+                removed.append((int(u), int(v)))
+                break
+        if len(removed) >= 6:
+            break
+    assert len(removed) >= 2, "tiny graph has no removable edges?"
+    for u, v in removed:
+        assert srv.remove_edge(u, v)
+    assert srv.planner.compactions >= 1
+    srv.flush()
+    assert srv.stats["planner_compactions"] == srv.planner.compactions
+
+    for p in range(pg.num_parts):
+        want: dict[int, set] = {}
+        for w in range(int(srv.n_own[p])):
+            for s in srv.nbr_loc[p][w]:
+                want.setdefault(int(s), set()).add(w)
+        n_rows = len(srv.planner._csc[p][0]) - 1
+        for row in range(n_rows):
+            got = set(map(int, srv.planner.out_rows(p, np.asarray([row]))))
+            assert got == want.get(row, set()), (p, row)
 
 
 def test_export_serving_state_cached_compile():
