@@ -30,6 +30,14 @@
 #                          the gradient wire bytes must be exactly half the
 #                          uncompressed run's and the halo exchange bytes
 #                          under half; runs outside the 30 s gate
+#   scripts/ci.sh featstore
+#                          feature-store smoke only: one tiny two-tier
+#                          feat-store epoch in BOTH engine modes (stacked and
+#                          forced-4-device spmd) against an all-resident
+#                          baseline; micro-F1 must match, the cold-row h2d
+#                          counter must equal the closed form, and the
+#                          resident feature footprint must shrink; runs
+#                          outside the 30 s gate
 #   scripts/ci.sh timing   the timing quarantine lane only: wall-clock-
 #                          sensitive tests, one automatic retry, never part
 #                          of the 30 s runtime gate
@@ -348,6 +356,57 @@ if [ "$mode" = "comm" ]; then
     exit 0
 fi
 
+# ---- feature-store smoke ----------------------------------------------------
+# Sixth fail-fast witness, at the HEAD of every tier-1 run: the PR-10
+# two-tier feature store.  One tiny epoch pair per engine mode (stacked, and
+# shard_map on 4 forced host devices): the feat-store run must reproduce the
+# all-resident micro-F1, report cold h2d bytes, and shrink the resident
+# feature footprint; hot_frac=1.0 must report EXACTLY the all-resident
+# counters (the pre-PR-10 accounting lock).  Not a pytest test, so it sits
+# outside the 30 s runtime gate by construction; the fp64 bitwise oracle
+# tier runs in tests/test_engine_parity.py.
+featstore_smoke() {
+    python - <<'PY'
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import numpy as np
+from repro.pipeline import EATConfig, run_eat_distgnn
+
+KW = dict(dataset="tiny", num_parts=4, batch_size=32, hidden_dim=16,
+          fanouts=(3, 3), max_epochs=2, phase0_fraction=1.0, seed=3)
+stats = {}
+bases = {}
+for mode in ("stacked", "spmd"):
+    base = run_eat_distgnn(EATConfig(**KW, engine_mode=mode))
+    fs = run_eat_distgnn(EATConfig(**KW, engine_mode=mode, feat_store=True,
+                                   hot_frac=0.25))
+    assert abs(fs.f1.micro - base.f1.micro) <= 1e-6, \
+        (mode, fs.f1.micro, base.f1.micro)
+    assert fs.cold_h2d_bytes > 0 and base.cold_h2d_bytes == 0
+    assert 0 < fs.resident_feature_bytes < base.resident_feature_bytes
+    stats[mode] = (fs.cold_h2d_bytes,
+                   fs.resident_feature_bytes / base.resident_feature_bytes)
+    bases[mode] = base
+hot1 = run_eat_distgnn(EATConfig(**KW, engine_mode="stacked",
+                                 feat_store=True, hot_frac=1.0))
+b = bases["stacked"]
+assert hot1.cold_h2d_bytes == 0
+assert hot1.f1.micro == b.f1.micro
+assert hot1.host_to_device_bytes_phase0 == b.host_to_device_bytes_phase0
+assert hot1.host_to_device_bytes_phase1 == b.host_to_device_bytes_phase1
+print("featstore smoke OK (cold bytes stacked/spmd "
+      f"{stats['stacked'][0]}/{stats['spmd'][0]}, resident ratio "
+      f"{stats['stacked'][1]:.2f}; hot_frac=1.0 stages zero cold bytes)")
+PY
+}
+
+if [ "$mode" = "featstore" ]; then
+    featstore_smoke || exit 1
+    exit 0
+fi
+
+featstore_smoke || { echo "REGRESSION: feature-store smoke failed"; exit 1; }
 grad_smoke || { echo "REGRESSION: grad-parity smoke failed"; exit 1; }
 halo_cache_smoke || { echo "REGRESSION: halo-cache smoke failed"; exit 1; }
 serve_smoke || { echo "REGRESSION: serving smoke failed"; exit 1; }

@@ -158,7 +158,7 @@ class DeviceEpochSampler:
 
     indptr: Any          # (N+1,) int32
     indices: Any         # (E,)  int32
-    features: Any        # (N, D)
+    features: Any        # (N, D); None under the two-tier feature store
     labels: Any          # (N,)  int32
     train_idx: Any       # (P, T) int32 global ids, 0-padded
     logp: Any            # (P, T) log Eq.3 probability, -inf on padding
@@ -168,6 +168,12 @@ class DeviceEpochSampler:
     num_batches: int     # I = ceil(K / B) (static)
     fanouts: tuple
     natural_iters: Any = None   # host np (P,): ceil(k_p / B) — budget input
+    # two-tier feature store (DESIGN.md §12): batches gather through remap
+    # into the concatenated [hot | staged cold] table instead of a fully
+    # resident (N, D) features array
+    hot_feats: Any = None       # (Nh, D) device-resident hot rows
+    remap: Any = None           # (N,) int32 global id -> [hot | cold] slot
+    cold_host: Any = None       # (Nc, D) numpy, host-resident staging source
 
     # -------------------------------------------------- on-trace programs
     def draw_epoch(self, key, logp_row, train_row, k_row):
@@ -195,35 +201,63 @@ class DeviceEpochSampler:
         return (nodes.reshape(self.num_batches, self.batch_size),
                 valid.reshape(self.num_batches, self.batch_size))
 
-    def make_batch(self, key, nodes, valid) -> dict:
+    def make_batch(self, key, nodes, valid, cold=None) -> dict:
         """Materialise one training batch on-trace: fanout blocks + feature
-        gather — the jax twin of the pipeline's host ``make_batch``."""
+        gather — the jax twin of the pipeline's host ``make_batch``.
+
+        Under the feature store the caller stages the cold rows (``cold``,
+        the traced ``cold_host`` buffer) and the gather runs through
+        ``remap`` into ``[hot | cold]`` space — bitwise identical to the
+        all-resident ``features[idx]`` gather (the table is a permutation
+        of the feature rows and the cast to the hot dtype is exact).
+        """
+        if (cold is None) != (self.cold_host is None):
+            raise ValueError(
+                "feat-store mismatch: pass cold= exactly when the sampler "
+                "was built with feat_store=True")
+        if cold is None:
+            feats = self.features
+        else:
+            feats = jnp.concatenate(
+                [self.hot_feats, cold.astype(self.hot_feats.dtype)], axis=0)
+        gather = (lambda ix: feats[ix]) if cold is None else \
+                 (lambda ix: feats[self.remap[ix]])
         f1, f2 = self.fanouts
         k1, k2 = jax.random.split(key)
         nbrs1 = device_fanout(k1, nodes, self.indptr, self.indices, f1)
         nbrs2 = device_fanout(k2, nbrs1.reshape(-1), self.indptr,
                               self.indices, f2)
         b = nodes.shape[0]
-        d = self.features.shape[-1]
-        x_t = self.features[nodes]
-        x_1 = self.features[nbrs1]
-        x_2 = self.features[nbrs2].reshape(b, f1, f2, d)
+        d = feats.shape[-1]
+        x_t = gather(nodes)
+        x_1 = gather(nbrs1)
+        x_2 = gather(nbrs2).reshape(b, f1, f2, d)
         labels = jnp.where(valid, self.labels[nodes], -1)
         return {"x_t": x_t, "x_1": x_1, "x_2": x_2, "labels": labels,
-                "mask": valid.astype(self.features.dtype)}
+                "mask": valid.astype(feats.dtype)}
 
 
 def build_device_epoch_sampler(graph, host_train, num_parts: int, *,
                                batch_size: int, subset_fraction: float = 0.25,
                                class_balanced: bool = True,
                                fanouts: tuple = (10, 10),
-                               dtype=jnp.float32) -> DeviceEpochSampler:
+                               dtype=jnp.float32,
+                               feat_store: bool = False,
+                               hot_frac: float = 0.5,
+                               hot_policy: str = "degree") -> DeviceEpochSampler:
     """Stage a :class:`DeviceEpochSampler` from a CSRGraph + per-host train
     sets.  Mini-epoch sizes mirror ``CBSampler.mini_epoch_size`` exactly, so
     budget accounting (``natural_iters``) matches the host sampler's batch
     counts; with ``class_balanced=False`` every partition's epoch is the
     full local train set drawn as a uniform permutation (the phase-0
-    baseline draw)."""
+    baseline draw).
+
+    With ``feat_store=True`` the replicated (N, D) features array is NOT
+    staged; instead the top ``hot_frac`` fraction of rows by ``hot_policy``
+    score live on device (``hot_feats``) and the rest stay in host numpy
+    (``cold_host``) for the engine to ship per compiled epoch call — the
+    sampler's gathers run through ``remap`` into ``[hot | cold]`` space.
+    """
     t_max = max(1, max(len(t) for t in host_train))
     train_pad = np.zeros((num_parts, t_max), np.int32)
     logp = np.full((num_parts, t_max), -np.inf, np.float32)
@@ -256,10 +290,20 @@ def build_device_epoch_sampler(graph, host_train, num_parts: int, *,
     num_batches = max(1, -(-subset_size // batch_size))
     natural = np.maximum(1, -(-ks // batch_size)).astype(np.int32)
     natural[ks == 0] = 0
+    if feat_store:
+        from ...graph.featstore import build_global_feat_store
+
+        gfs = build_global_feat_store(graph, hot_frac, hot_policy,
+                                      np.dtype(dtype))
+        feat_kw = dict(features=None,
+                       hot_feats=jnp.asarray(gfs.hot, dtype),
+                       remap=jnp.asarray(gfs.remap),
+                       cold_host=gfs.cold)
+    else:
+        feat_kw = dict(features=jnp.asarray(graph.features, dtype))
     return DeviceEpochSampler(
         indptr=jnp.asarray(graph.indptr, jnp.int32),
         indices=jnp.asarray(graph.indices, jnp.int32),
-        features=jnp.asarray(graph.features, dtype),
         labels=jnp.asarray(graph.labels, jnp.int32),
         train_idx=jnp.asarray(train_pad),
         logp=jnp.asarray(logp),
@@ -269,4 +313,5 @@ def build_device_epoch_sampler(graph, host_train, num_parts: int, *,
         num_batches=num_batches,
         fanouts=tuple(fanouts),
         natural_iters=natural,
+        **feat_kw,
     )

@@ -65,6 +65,12 @@ class SequentialReference:
                 "halo_compress quantizes the gathered send buffer on the "
                 "combined-edge eval forward; the overlap forward has no "
                 "compressed spelling — pick one")
+        if bool(getattr(config, "feat_store", False)):
+            raise ValueError(
+                "SequentialReference IS the all-resident oracle the "
+                "feat-store engine is locked against; build it without "
+                "feat_store (a feat-store DeviceEpochSampler is still "
+                "accepted — its gather is bitwise the resident one)")
         self.features = jnp.asarray(pg.features, f)        # (P, maxN, D)
         self.send_idx = jnp.asarray(pg.send_idx)
         self.send_mask = jnp.asarray(pg.send_mask, f)
@@ -455,6 +461,10 @@ class SequentialReference:
         if self._device_sampler is None:
             raise ValueError("phase0_epoch_async needs set_device_sampler()")
         ds = self._device_sampler
+        # a feat-store sampler gathers through [hot | staged cold]; pass its
+        # host cold table exactly when the sampler was built with the store
+        ck = ({} if getattr(ds, "cold_host", None) is None
+              else {"cold": jnp.asarray(ds.cold_host)})
         P = self.num_parts
         iters = ds.num_batches
         # per-partition epoch draws, in the engine's exact key order:
@@ -468,7 +478,8 @@ class SequentialReference:
         # warm the jit caches on the first iteration's shapes (results
         # discarded — the functions are pure) so the timed window excludes
         # XLA compilation, matching the engine's AOT contract
-        b0 = ds.make_batch(drawn[0][2][0], drawn[0][0][0], drawn[0][1][0])
+        b0 = ds.make_batch(drawn[0][2][0], drawn[0][0][0], drawn[0][1][0],
+                           **ck)
         _, g0 = self._grad_step(params, b0)
         z = jax.tree.map(lambda g: jnp.stack([g] * P), g0)
         topk = self.grad_compress == "topk"
@@ -484,7 +495,7 @@ class SequentialReference:
             losses, grads = [], []
             for p in range(P):
                 nodes, valid, iter_keys = drawn[p]
-                b = ds.make_batch(iter_keys[it], nodes[it], valid[it])
+                b = ds.make_batch(iter_keys[it], nodes[it], valid[it], **ck)
                 l, g = self._grad_step(params, b)
                 losses.append(l)
                 grads.append(g)
@@ -623,6 +634,8 @@ class SequentialReference:
         if self._device_sampler is None:
             raise ValueError("phase1_epoch_async needs set_device_sampler()")
         ds = self._device_sampler
+        ck = ({} if getattr(ds, "cold_host", None) is None
+              else {"cold": jnp.asarray(ds.cold_host)})
         P = self.num_parts
         budgets = np.asarray(budgets)
         iters = ds.num_batches
@@ -638,7 +651,8 @@ class SequentialReference:
             iter_keys = jax.random.split(ke, iters)
             losses = []
             for it in range(iters):
-                batch = ds.make_batch(iter_keys[it], nodes[it], valid[it])
+                batch = ds.make_batch(iter_keys[it], nodes[it], valid[it],
+                                      **ck)
                 pp[p], po[p], l = self._pstep1(
                     pp[p], po[p], batch, global_params,
                     jnp.asarray(it < budgets[p]))

@@ -52,10 +52,13 @@ from ..graph.distributed import (HALO_COMPRESS_MODES, PartitionedGraph,
                                  make_overlap_forward, make_pallas_mean_agg,
                                  make_pallas_split_agg, make_ref_mean_agg,
                                  make_ref_split_agg, wire_row_bytes)
+from ..graph.featstore import (assemble_features, check_feat_budget,
+                               feat_peak_bytes, reconstruct_features)
 from ..train.metrics import f1_scores_jnp
 from ..train.optim import apply_updates
 from .compat import shard_map_compat
-from .stacking import (build_stacked_halo_cache, build_stacked_halo_residual,
+from .stacking import (build_stacked_feat_store, build_stacked_halo_cache,
+                       build_stacked_halo_residual,
                        build_stacked_split_vjp_blocks,
                        build_stacked_vjp_blocks, stack_pytrees)
 
@@ -97,6 +100,21 @@ class EngineConfig:
     grad_compress: str = "none"
     grad_topk_frac: float = 0.01    # fraction of entries top-k ships
     grad_bucket_kb: int = 512       # bucketed psum slice size
+    # two-tier feature store (DESIGN.md §12): keep only the hot_frac
+    # highest-scoring owned feature rows resident per partition; cold rows
+    # live in host numpy and are staged as compiled-call arguments — every
+    # trace reassembles the full plane bitwise before the forward runs
+    feat_store: bool = False
+    hot_frac: float = 0.5
+    hot_policy: str = "degree"      # degree | freq (see graph/featstore.py)
+    # partition-group streaming (0 = off): evaluate in groups of G <= P
+    # partitions so no (P, maxN, D) feature stack ever materializes —
+    # the bigger-than-device path; requires feat_store, stacked mode
+    feat_groups: int = 0
+    # feature-memory budget in MB (0 = unchecked): the engine refuses to
+    # build a configuration whose closed-form peak device feature bytes
+    # exceed it (FeatureBudgetError) instead of OOMing mid-epoch
+    feat_budget_mb: float = 0.0
 
 
 def _resolve_mode(mode: str, num_parts: int) -> str:
@@ -172,6 +190,28 @@ class SPMDEngine:
         self.num_classes = model.num_classes
         self.max_nodes = pg.max_nodes
         self.mode = _resolve_mode(config.mode, pg.num_parts)
+        if config.feat_groups:
+            if not config.feat_store:
+                raise ValueError(
+                    "feat_groups streams the feat-store cold tier over "
+                    "partition groups; enable feat_store to use it")
+            if not 1 <= config.feat_groups <= pg.num_parts:
+                raise ValueError(
+                    f"feat_groups must be in [1, num_parts], got "
+                    f"{config.feat_groups}")
+            if config.mode == "spmd":
+                raise ValueError(
+                    "feat_groups is a host-orchestrated streaming eval over "
+                    "partition groups; the one-partition-per-device mesh "
+                    "needs all planes at once — use stacked mode")
+            if (config.halo_cache or config.overlap_halo
+                    or config.halo_compress != "none"):
+                raise ValueError(
+                    "feat_groups streams the eval through the plain "
+                    "sequential exchange; it has no cached/compressed/"
+                    "overlapped spelling — pick one")
+            # "auto" must not pick spmd: the streamed eval is stacked-only
+            self.mode = "stacked"
 
         if config.halo_compress not in HALO_COMPRESS_MODES:
             raise ValueError(f"unknown halo_compress {config.halo_compress!r} "
@@ -193,12 +233,28 @@ class SPMDEngine:
         self._halo_itemsize = pg.features.dtype.itemsize
 
         f = config.dtype
+        self.feat_store = bool(config.feat_store)
+        # host->device bytes spent staging cold feature rows (counted where
+        # the numpy staging buffer is handed to a compiled call); stays 0
+        # all-resident and at hot_frac=1.0 (zero-size cold tier)
+        self.cold_h2d_bytes = 0
+        self._fs = None
+        self._cold_host = None
+        self._streamer = None
         self.shards = {
-            "features": jnp.asarray(pg.features, f),
             "send_idx": jnp.asarray(pg.send_idx),
             "send_mask": jnp.asarray(pg.send_mask, f),
             "recv_pos": jnp.asarray(pg.recv_pos),
         }
+        if self.feat_store:
+            entries, self._fs = build_stacked_feat_store(
+                pg, config.hot_frac, config.hot_policy, f)
+            self.shards.update(entries)
+            self._cold_host = self._fs.cold
+        else:
+            self.shards["features"] = jnp.asarray(pg.features, f)
+        check_feat_budget(config.feat_budget_mb, self._feat_peak_bytes(pg),
+                          context=f"mode={self.mode}")
         def _as_blk(d: dict) -> dict:
             # one nested pytree per segment_mean_op call site: int arrays
             # stay int32, float structure follows the feature dtype
@@ -333,6 +389,64 @@ class SPMDEngine:
         micro, _, _ = f1_scores_jnp(preds, lab, self.num_classes)
         return micro
 
+    # ------------------------------------------- two-tier feature store
+    def _feat_peak_bytes(self, pg) -> int:
+        d = pg.features.shape[-1]
+        b = np.dtype(self.config.dtype).itemsize
+        if not self.feat_store:
+            return feat_peak_bytes(self.num_parts, pg.max_nodes, d, b)
+        return feat_peak_bytes(
+            self.num_parts, pg.max_nodes, d, b,
+            hot_rows=self._fs.hot.shape[1], cold_rows=self._fs.cold.shape[1],
+            groups=self.config.feat_groups)
+
+    def _featurize(self, shard, cold):
+        """Reassemble one partition's full feature plane on-trace from the
+        resident hot tier and the staged cold rows — bitwise equal to the
+        all-resident ``shard["features"]`` (graph/featstore.py invariant),
+        so every downstream forward (plain/cached/compressed/overlap) is
+        untouched.  Passthrough when the store is off."""
+        if not self.feat_store:
+            return shard
+        s = dict(shard)
+        s["features"] = assemble_features(
+            s.pop("fs_hot"), s.pop("fs_rows_hot"),
+            cold, s.pop("fs_rows_cold"), self.max_nodes)
+        return s
+
+    def _stage_cold(self):
+        """The (P, C, D) cold staging buffer for ONE compiled call.  Numpy
+        on purpose: handing a host array to the executable is the actual
+        host->device transfer the store trades residency for, counted here."""
+        self.cold_h2d_bytes += self._cold_host.nbytes
+        return self._cold_host
+
+    def _fs_args(self) -> tuple:
+        """Trailing compiled-call args of any trace that reassembles the
+        shard feature plane: ``(cold,)`` under the store, ``()`` otherwise
+        (keeping the all-resident call signatures byte-identical)."""
+        return (self._stage_cold(),) if self.feat_store else ()
+
+    def _stage_sampler_cold(self):
+        """The device sampler's (Nc, D) cold rows for one epoch call."""
+        ch = self._device_sampler.cold_host
+        self.cold_h2d_bytes += ch.nbytes
+        return ch
+
+    @property
+    def resident_feature_bytes(self) -> int:
+        """Device-resident feature bytes: the engine's stacked plane (or
+        hot tier) plus the attached device sampler's gather table (or its
+        hot tier) — the footprint the feature store shrinks."""
+        arr = self.shards["fs_hot"] if self.feat_store \
+            else self.shards["features"]
+        total = int(arr.size) * arr.dtype.itemsize
+        ds = self._device_sampler
+        if ds is not None:
+            t = ds.features if ds.features is not None else ds.hot_feats
+            total += int(t.size) * t.dtype.itemsize
+        return total
+
     # ------------------------------------------ historical halo cache state
     # The cache ages once per distributed eval forward (standalone evaluate
     # OR the fused async epoch's eval); the refresh slot range is a host-side
@@ -430,42 +544,50 @@ class SPMDEngine:
         return self._cached_fwds[key]
 
     def _eval_stacked_cached(self, params, cache, split: str,
-                             per_partition_params: bool, plan, residual=None):
+                             per_partition_params: bool, plan, residual=None,
+                             fs=()):
         fwd_c = self._cached_fwd(*plan)
 
         if residual is not None:
-            def one_c(prm, shard, c, r, labels, mask):
-                logits, nc, nr = fwd_c(prm, shard, c, r)
+            def one_c(prm, shard, c, r, labels, mask, *cold):
+                logits, nc, nr = fwd_c(prm, self._featurize(shard, *cold)
+                                       if cold else shard, c, r)
                 preds = jnp.argmax(logits, axis=-1)
                 return self._micro_of(preds, labels, mask), preds, nc, nr
 
             return jax.vmap(one_c, axis_name=AXIS,
                             in_axes=(0 if per_partition_params else None,
-                                     0, 0, 0, 0, 0))(
+                                     0, 0, 0, 0, 0) + (0,) * len(fs))(
                 params, self.shards, cache, residual, self.labels,
-                self.masks[split])
+                self.masks[split], *fs)
 
-        def one(prm, shard, c, labels, mask):
-            logits, nc = fwd_c(prm, shard, c)
+        def one(prm, shard, c, labels, mask, *cold):
+            logits, nc = fwd_c(prm, self._featurize(shard, *cold)
+                               if cold else shard, c)
             preds = jnp.argmax(logits, axis=-1)
             return self._micro_of(preds, labels, mask), preds, nc
 
         return jax.vmap(one, axis_name=AXIS,
                         in_axes=(0 if per_partition_params else None,
-                                 0, 0, 0, 0))(
-            params, self.shards, cache, self.labels, self.masks[split])
+                                 0, 0, 0, 0) + (0,) * len(fs))(
+            params, self.shards, cache, self.labels, self.masks[split], *fs)
 
     def _eval_spmd_cached(self, params, cache, split: str,
-                          per_partition_params: bool, plan, residual=None):
+                          per_partition_params: bool, plan, residual=None,
+                          fs=()):
         fwd_c = self._cached_fwd(*plan)
         comp = residual is not None
 
-        def shard_fn(prm, cache_s, shard_s, labels_s, mask_s, *res_s):
+        def shard_fn(prm, cache_s, shard_s, labels_s, mask_s, *rest_s):
+            rest = list(rest_s)
             p = jax.tree.map(lambda x: x[0], prm) if per_partition_params else prm
             sh = jax.tree.map(lambda x: x[0], shard_s)
             c = jax.tree.map(lambda x: x[0], cache_s)
+            res_s = rest.pop(0) if comp else None
+            if rest:                                  # staged cold rows
+                sh = self._featurize(sh, rest[0][0])
             if comp:
-                r = jax.tree.map(lambda x: x[0], res_s[0])
+                r = jax.tree.map(lambda x: x[0], res_s)
                 logits, nc, nr = fwd_c(p, sh, c, r)
             else:
                 logits, nc = fwd_c(p, sh, c)
@@ -480,31 +602,36 @@ class SPMDEngine:
             shard_fn, self._mesh,
             in_specs=(P(AXIS) if per_partition_params else P(),
                       P(AXIS), P(AXIS), P(AXIS), P(AXIS))
-                     + ((P(AXIS),) if comp else ()),
+                     + ((P(AXIS),) if comp else ())
+                     + (P(AXIS),) * len(fs),
             out_specs=(P(AXIS), P(AXIS), P(AXIS))
                       + ((P(AXIS),) if comp else ()))
         args = (params, cache, self.shards, self.labels, self.masks[split])
         if comp:
             args = args + (residual,)
-        return fn(*args)
+        return fn(*(args + tuple(fs)))
 
     def _eval_stacked_comp(self, params, residual, split: str,
-                           per_partition_params: bool):
-        def one(prm, shard, r, labels, mask):
-            logits, nr = self._fwd_comp(prm, shard, r)
+                           per_partition_params: bool, fs=()):
+        def one(prm, shard, r, labels, mask, *cold):
+            logits, nr = self._fwd_comp(prm, self._featurize(shard, *cold)
+                                        if cold else shard, r)
             preds = jnp.argmax(logits, axis=-1)
             return self._micro_of(preds, labels, mask), preds, nr
 
         return jax.vmap(one, axis_name=AXIS,
                         in_axes=(0 if per_partition_params else None,
-                                 0, 0, 0, 0))(
-            params, self.shards, residual, self.labels, self.masks[split])
+                                 0, 0, 0, 0) + (0,) * len(fs))(
+            params, self.shards, residual, self.labels, self.masks[split],
+            *fs)
 
     def _eval_spmd_comp(self, params, residual, split: str,
-                        per_partition_params: bool):
-        def shard_fn(prm, res_s, shard_s, labels_s, mask_s):
+                        per_partition_params: bool, fs=()):
+        def shard_fn(prm, res_s, shard_s, labels_s, mask_s, *cold_s):
             p = jax.tree.map(lambda x: x[0], prm) if per_partition_params else prm
             sh = jax.tree.map(lambda x: x[0], shard_s)
+            if cold_s:
+                sh = self._featurize(sh, cold_s[0][0])
             r = jax.tree.map(lambda x: x[0], res_s)
             logits, nr = self._fwd_comp(p, sh, r)
             preds = jnp.argmax(logits, axis=-1)
@@ -514,16 +641,22 @@ class SPMDEngine:
         fn = shard_map_compat(
             shard_fn, self._mesh,
             in_specs=(P(AXIS) if per_partition_params else P(),
-                      P(AXIS), P(AXIS), P(AXIS), P(AXIS)),
+                      P(AXIS), P(AXIS), P(AXIS), P(AXIS))
+                     + (P(AXIS),) * len(fs),
             out_specs=(P(AXIS), P(AXIS), P(AXIS)))
         return fn(params, residual, self.shards, self.labels,
-                  self.masks[split])
+                  self.masks[split], *fs)
 
     # ------------------------------------------------- stacked (vmap) mode
-    def _eval_stacked(self, params, split: str, per_partition_params: bool):
-        in_axes = (0 if per_partition_params else None, 0)
-        logits = jax.vmap(self.fwd, axis_name=AXIS, in_axes=in_axes)(
-            params, self.shards)                     # (P, maxN, C)
+    def _eval_stacked(self, params, split: str, per_partition_params: bool,
+                      fs=()):
+        def one(prm, shard, *cold):
+            return self.fwd(prm, self._featurize(shard, *cold)
+                            if cold else shard)
+
+        in_axes = (0 if per_partition_params else None, 0) + (0,) * len(fs)
+        logits = jax.vmap(one, axis_name=AXIS, in_axes=in_axes)(
+            params, self.shards, *fs)                # (P, maxN, C)
         preds = jnp.argmax(logits, axis=-1)
         micro = jax.vmap(self._micro_of)(preds, self.labels, self.masks[split])
         return micro, preds
@@ -657,12 +790,16 @@ class SPMDEngine:
         cache (when ``plan`` is set), halo residual (``halo_compress``),
         flat gradient residual (``grad_compress == "topk"``) — and the
         return tuple appends their updated values in the same order after
-        ``(params, opt_state, losses, micro)``.
+        ``(params, opt_state, losses, micro)``.  Under the feature store
+        two staged cold buffers follow the state (the sampler's (Nc, D)
+        rows for the batch gathers, this partition's (C, D) rows for the
+        fused eval's plane); they are inputs only, never returned.
         """
         ds = self._device_sampler
         num_parts = self.num_parts
         comp = self.halo_compress != "none"
         topk = self.grad_compress == "topk"
+        fs_on = self.feat_store
         fwd_c = self._cached_fwd(*plan) if plan is not None else None
         g_reduce = self._grad_reduce_shard()
 
@@ -672,6 +809,8 @@ class SPMDEngine:
             cache = st.pop(0) if fwd_c is not None else None
             h_res = st.pop(0) if comp else None
             g_res = st.pop(0) if topk else None
+            ck = {"cold": st.pop(0)} if fs_on else {}
+            sh_cold = st.pop(0) if fs_on else None
             kd, ke = jax.random.split(key)
             nodes, valid = ds.draw_epoch(kd, logp_row, train_row, k_row)
             iter_keys = jax.random.split(ke, ds.num_batches)
@@ -680,7 +819,7 @@ class SPMDEngine:
                 def one_t(carry, xs):
                     n_i, v_i, k_i = xs
                     p, o, r = carry
-                    batch = ds.make_batch(k_i, n_i, v_i)
+                    batch = ds.make_batch(k_i, n_i, v_i, **ck)
                     loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
                     grads, r = g_reduce(grads, r)
                     updates, o = self.optimizer.update(grads, o, p)
@@ -693,7 +832,7 @@ class SPMDEngine:
                 def one(carry, xs):
                     n_i, v_i, k_i = xs
                     p, o = carry
-                    batch = ds.make_batch(k_i, n_i, v_i)
+                    batch = ds.make_batch(k_i, n_i, v_i, **ck)
                     loss, grads = jax.value_and_grad(self.loss_fn)(p, batch)
                     if g_reduce is not None:              # bucketed psum
                         grads = g_reduce(grads)
@@ -706,6 +845,11 @@ class SPMDEngine:
 
                 (params, opt_state), losses = jax.lax.scan(
                     one, (params, opt_state), (nodes, valid, iter_keys))
+            if fs_on:
+                # reassemble the shard plane only now, after the (feature-
+                # free) train scan, so the assembled array's live range is
+                # just the fused eval
+                shard = self._featurize(shard, sh_cold)
             # fused eval: the validation forward (halo exchange + blocked
             # aggregation + on-device F1) on the epoch's final params, in
             # the SAME device program as the train scan
@@ -732,15 +876,16 @@ class SPMDEngine:
         return per_part
 
     def _phase0_async_stacked(self, params, opt_state, keys, state=(),
-                              plan=None):
+                              plan=None, fs=()):
         ds = self._device_sampler
         per_part = self._phase0_async_partition_program(plan)
-        extra_axes = (0,) * len(state)
+        # fs = (sampler cold (Nc, D) — replicated, shard cold (P, C, D))
+        extra_axes = (0,) * len(state) + ((None, 0) if fs else ())
         out = jax.vmap(
             per_part, axis_name=AXIS,
             in_axes=(None, None, 0, 0, 0, 0, 0, 0, 0) + extra_axes)(
                 params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
-                self.shards, self.labels, self.masks["val"], *state)
+                self.shards, self.labels, self.masks["val"], *state, *fs)
         params, opt_state, losses, micro = out[:4]
         # every partition applies the identical mean update to the identical
         # replica: return one copy (bitwise equal across the stacked axis)
@@ -750,15 +895,20 @@ class SPMDEngine:
         return head + tuple(out[4:])
 
     def _phase0_async_spmd(self, params, opt_state, keys, state=(),
-                           plan=None):
+                           plan=None, fs=()):
         ds = self._device_sampler
         n_st = len(state)
 
         def shard_fn(params, opt_state, key_s, logp_s, train_s, k_s,
-                     shard_s, labels_s, mask_s, *state_s):
+                     shard_s, labels_s, mask_s, *rest_s):
             per_part = self._phase0_async_partition_program(plan)
             sh = jax.tree.map(lambda x: x[0], shard_s)
-            extra = tuple(jax.tree.map(lambda x: x[0], c) for c in state_s)
+            extra = tuple(jax.tree.map(lambda x: x[0], c)
+                          for c in rest_s[:n_st])
+            if fs:
+                # sampler cold is replicated (P() spec — arrives whole);
+                # the per-partition shard cold is sharded like the shards
+                extra += (rest_s[n_st], rest_s[n_st + 1][0])
             out = per_part(
                 params, opt_state, key_s[0], logp_s[0], train_s[0], k_s[0],
                 sh, labels_s[0], mask_s[0], *extra)
@@ -770,10 +920,12 @@ class SPMDEngine:
         fn = shard_map_compat(
             shard_fn, self._mesh,
             in_specs=(P(), P(), P(AXIS), P(AXIS), P(AXIS), P(AXIS),
-                      P(AXIS), P(AXIS), P(AXIS)) + (P(AXIS),) * n_st,
+                      P(AXIS), P(AXIS), P(AXIS)) + (P(AXIS),) * n_st
+                     + ((P(), P(AXIS)) if fs else ()),
             out_specs=(P(), P(), P(None, AXIS), P(AXIS)) + (P(AXIS),) * n_st)
         args = (params, opt_state, keys, ds.logp, ds.train_idx, ds.k,
-                self.shards, self.labels, self.masks["val"]) + tuple(state)
+                self.shards, self.labels, self.masks["val"]) \
+            + tuple(state) + tuple(fs)
         return fn(*args)
 
     def _phase1_stacked(self, pparams, popt, batches, global_params, budgets):
@@ -801,7 +953,8 @@ class SPMDEngine:
         pstep1 = make_personalize_partition_step(self.loss_fn, self.optimizer,
                                                  self.hp)
 
-        def per_part(pp, po, key, budget, logp_row, train_row, k_row):
+        def per_part(pp, po, key, budget, logp_row, train_row, k_row, *fs):
+            ck = {"cold": fs[0]} if fs else {}
             kd, ke = jax.random.split(key)
             nodes, valid = ds.draw_epoch(kd, logp_row, train_row, k_row)
             iter_keys = jax.random.split(ke, ds.num_batches)
@@ -809,7 +962,7 @@ class SPMDEngine:
             def one(carry, xs):
                 i, n_i, v_i, k_i = xs
                 p, o = carry
-                batch = ds.make_batch(k_i, n_i, v_i)
+                batch = ds.make_batch(k_i, n_i, v_i, **ck)
                 p, o, l = pstep1(p, o, batch, global_params, i < budget)
                 return (p, o), l
 
@@ -822,13 +975,14 @@ class SPMDEngine:
         return per_part
 
     def _phase1_async_stacked(self, pparams, popt, keys, budgets,
-                              global_params, i_run: int):
+                              global_params, i_run: int, fs=()):
         ds = self._device_sampler
         per_part = self._async_partition_program(global_params, i_run)
         pparams, popt, losses = jax.vmap(
-            per_part, in_axes=(0, 0, 0, 0, 0, 0, 0))(
+            per_part, in_axes=(0, 0, 0, 0, 0, 0, 0)
+            + (None,) * len(fs))(
                 pparams, popt, keys, budgets,
-                ds.logp, ds.train_idx, ds.k)
+                ds.logp, ds.train_idx, ds.k, *fs)
         return pparams, popt, losses.T              # (i_run, P)
 
     # --------------------------------------------------- spmd (mesh) mode
@@ -913,15 +1067,16 @@ class SPMDEngine:
         return fn(pparams, popt, batches, global_params, budgets)
 
     def _phase1_async_spmd(self, pparams, popt, keys, budgets, global_params,
-                           i_run: int):
+                           i_run: int, fs=()):
         ds = self._device_sampler
 
-        def shard_fn(pp_s, po_s, key_s, bud_s, gp, logp_s, train_s, k_s):
+        def shard_fn(pp_s, po_s, key_s, bud_s, gp, logp_s, train_s, k_s,
+                     *fs_s):
             per_part = self._async_partition_program(gp, i_run)
             pp = jax.tree.map(lambda x: x[0], pp_s)
             po = jax.tree.map(lambda x: x[0], po_s)
             pp, po, losses = per_part(pp, po, key_s[0], bud_s[0],
-                                      logp_s[0], train_s[0], k_s[0])
+                                      logp_s[0], train_s[0], k_s[0], *fs_s)
             return (jax.tree.map(lambda x: x[None], pp),
                     jax.tree.map(lambda x: x[None], po),
                     losses[:, None])
@@ -929,15 +1084,18 @@ class SPMDEngine:
         fn = shard_map_compat(
             shard_fn, self._mesh,
             in_specs=(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(),
-                      P(AXIS), P(AXIS), P(AXIS)),
+                      P(AXIS), P(AXIS), P(AXIS)) + (P(),) * len(fs),
             out_specs=(P(AXIS), P(AXIS), P(None, AXIS)))
         return fn(pparams, popt, keys, budgets, global_params,
-                  ds.logp, ds.train_idx, ds.k)
+                  ds.logp, ds.train_idx, ds.k, *fs)
 
-    def _eval_spmd(self, params, split: str, per_partition_params: bool):
-        def shard_fn(prm, shard_s, labels_s, mask_s):
+    def _eval_spmd(self, params, split: str, per_partition_params: bool,
+                   fs=()):
+        def shard_fn(prm, shard_s, labels_s, mask_s, *cold_s):
             p = jax.tree.map(lambda x: x[0], prm) if per_partition_params else prm
             sh = jax.tree.map(lambda x: x[0], shard_s)
+            if cold_s:
+                sh = self._featurize(sh, cold_s[0][0])
             preds = jnp.argmax(self.fwd(p, sh), axis=-1)
             micro = self._micro_of(preds, labels_s[0], mask_s[0])
             return micro[None], preds[None]
@@ -945,9 +1103,9 @@ class SPMDEngine:
         fn = shard_map_compat(
             shard_fn, self._mesh,
             in_specs=(P(AXIS) if per_partition_params else P(),
-                      P(AXIS), P(AXIS), P(AXIS)),
+                      P(AXIS), P(AXIS), P(AXIS)) + (P(AXIS),) * len(fs),
             out_specs=(P(AXIS), P(AXIS)))
-        return fn(params, self.shards, self.labels, self.masks[split])
+        return fn(params, self.shards, self.labels, self.masks[split], *fs)
 
     # ------------------------------------------------------- public surface
     # Epoch methods return a trailing ``device_seconds``: wall time of the
@@ -1002,6 +1160,11 @@ class SPMDEngine:
         """
         if self._device_sampler is None:
             raise ValueError("phase0_epoch_async needs set_device_sampler()")
+        if self.config.feat_groups:
+            raise ValueError(
+                "feat_groups streams the eval forward on the host; the "
+                "fused async epoch is one device program — run the host-"
+                "batch phase-0 path (async_generalize=False) when streaming")
         base = (self._phase0_async_spmd if self.mode == "spmd"
                 else self._phase0_async_stacked)
         comp = self.halo_compress != "none"
@@ -1015,13 +1178,20 @@ class SPMDEngine:
             state += (self._halo_residual,)
         if topk:
             state += (self._grad_residual(params),)
-        if state:
-            impl = lambda p, o, k, *st: base(p, o, k, st, plan)
+        # staged cold rows (feature store): the sampler's global cold tier
+        # feeds the batch gathers, the shard cold tier feeds the fused eval
+        fs = ((self._stage_sampler_cold(), self._stage_cold())
+              if self.feat_store else ())
+        if state or fs:
+            n_st = len(state)
+            impl = lambda p, o, k, *st: base(p, o, k, st[:n_st], plan,
+                                             st[n_st:])
             name = f"phase0_async-g{self._sampler_gen}"
             if plan is not None:
                 name += f"-c{plan[0]}-{plan[1]}"
-            fn = self._compiled(name, impl, params, opt_state, keys, *state)
-            out, dt = self._timed(fn, params, opt_state, keys, *state)
+            fn = self._compiled(name, impl, params, opt_state, keys,
+                                *state, *fs)
+            out, dt = self._timed(fn, params, opt_state, keys, *state, *fs)
             params, opt_state, losses, val_micro = out[:4]
             rest = list(out[4:])
             if plan is not None:
@@ -1049,6 +1219,12 @@ class SPMDEngine:
         ``use_pallas_agg=True``) and the cross-partition gradient mean.  The
         centralized (P=1) configuration is the paper's Table IV baseline at
         full-graph scale; P>1 is per-partition full-graph training."""
+        if self.feat_store:
+            raise ValueError(
+                "full-graph training differentiates through the resident "
+                "feature stack on every iteration; the feature store "
+                "serves features per compiled call — run full_graph_train "
+                "all-resident")
         if self.halo_cache:
             raise ValueError(
                 "halo_cache is an eval-forward optimisation; full-graph "
@@ -1091,6 +1267,12 @@ class SPMDEngine:
         """Attach a :class:`DeviceEpochSampler`; required by
         :meth:`phase0_epoch_async` and :meth:`phase1_epoch_async` (the
         fully-on-device epoch paths)."""
+        if self.feat_store != (getattr(sampler, "cold_host", None)
+                               is not None):
+            raise ValueError(
+                "feat-store mismatch: the engine and its device sampler "
+                "must agree — build the sampler with feat_store matching "
+                "EngineConfig.feat_store")
         self._device_sampler = sampler
         # the sampler's arrays are baked into the async trace as constants,
         # so a new sampler must never hit an old executable (shapes alone
@@ -1123,18 +1305,25 @@ class SPMDEngine:
         i_run = min(i_run, cap)
         impl = (self._phase1_async_spmd if self.mode == "spmd"
                 else self._phase1_async_stacked)
+        # the phase-1 scan only gathers batch features (no fused eval), so
+        # the feature store stages just the sampler's cold tier here
+        fs = (self._stage_sampler_cold(),) if self.feat_store else ()
         fn = self._compiled(
             f"phase1_async-{i_run}-g{self._sampler_gen}",
-            lambda pp, po, k, b, gp: impl(pp, po, k, b, gp, i_run),
-            pparams, popt, keys, budgets, global_params)
+            lambda pp, po, k, b, gp, *c: impl(pp, po, k, b, gp, i_run, c),
+            pparams, popt, keys, budgets, global_params, *fs)
         (pparams, popt, losses), dt = self._timed(
-            fn, pparams, popt, keys, budgets, global_params)
+            fn, pparams, popt, keys, budgets, global_params, *fs)
         val_micro, _ = self.evaluate(pparams, "val", per_partition_params=True)
         return pparams, popt, losses, val_micro, dt
 
     def evaluate(self, params, split: str = "test",
                  per_partition_params: bool = True):
+        if self.config.feat_groups:
+            return self._evaluate_streamed(params, split,
+                                           per_partition_params)
         comp = self.halo_compress != "none"
+        fs = self._fs_args()
         if self.halo_cache:
             # the refresh slot range is a static host-side plan, so every
             # plan gets its own executable (the pure-cached one has no
@@ -1144,15 +1333,17 @@ class SPMDEngine:
             res = (self._halo_residual,) if comp else ()
             if self.mode == "spmd":
                 impl = lambda prm, c, *r: self._eval_spmd_cached(
-                    prm, c, split, per_partition_params, plan, *r)
+                    prm, c, split, per_partition_params, plan,
+                    *r[:len(res)], fs=r[len(res):])
             else:
                 impl = lambda prm, c, *r: self._eval_stacked_cached(
-                    prm, c, split, per_partition_params, plan, *r)
+                    prm, c, split, per_partition_params, plan,
+                    *r[:len(res)], fs=r[len(res):])
             fn = self._compiled(
                 f"eval-{split}-{per_partition_params}-c{plan[0]}-{plan[1]}",
-                impl, params, self._halo_state, *res)
+                impl, params, self._halo_state, *res, *fs)
             out, self.last_eval_seconds = self._timed(
-                fn, params, self._halo_state, *res)
+                fn, params, self._halo_state, *res, *fs)
             if comp:
                 micro, preds, new_state, new_res = out
                 self._halo_residual = new_res
@@ -1162,29 +1353,53 @@ class SPMDEngine:
             return micro, preds
         if comp:
             if self.mode == "spmd":
-                impl = lambda prm, r: self._eval_spmd_comp(
-                    prm, r, split, per_partition_params)
+                impl = lambda prm, r, *c: self._eval_spmd_comp(
+                    prm, r, split, per_partition_params, fs=c)
             else:
-                impl = lambda prm, r: self._eval_stacked_comp(
-                    prm, r, split, per_partition_params)
+                impl = lambda prm, r, *c: self._eval_stacked_comp(
+                    prm, r, split, per_partition_params, fs=c)
             fn = self._compiled(f"eval-{split}-{per_partition_params}",
-                                impl, params, self._halo_residual)
+                                impl, params, self._halo_residual, *fs)
             (micro, preds, new_res), self.last_eval_seconds = self._timed(
-                fn, params, self._halo_residual)
+                fn, params, self._halo_residual, *fs)
             self._halo_residual = new_res
             self.last_halo_exchange_bytes = (self.model.num_layers
                                              * self.halo_wire_bytes_per_layer)
             return micro, preds
         if self.mode == "spmd":
-            impl = lambda prm: self._eval_spmd(prm, split, per_partition_params)
+            impl = lambda prm, *c: self._eval_spmd(
+                prm, split, per_partition_params, fs=c)
         else:
-            impl = lambda prm: self._eval_stacked(prm, split, per_partition_params)
-        fn = self._compiled(f"eval-{split}-{per_partition_params}", impl, params)
+            impl = lambda prm, *c: self._eval_stacked(
+                prm, split, per_partition_params, fs=c)
+        fn = self._compiled(f"eval-{split}-{per_partition_params}", impl,
+                            params, *fs)
         # execution time of the compiled eval (AOT compile excluded), so the
         # pipeline can compare host-path epochs, whose eval is a separate
         # call, against the fused async epoch whose timing includes eval
-        out, self.last_eval_seconds = self._timed(fn, params)
+        out, self.last_eval_seconds = self._timed(fn, params, *fs)
         return out
+
+    def _evaluate_streamed(self, params, split: str,
+                           per_partition_params: bool):
+        """Partition-group streaming eval (DESIGN.md §12): host-orchestrated
+        eager forward over groups of ``feat_groups`` partitions, so at most
+        G assembled feature planes exist at once — the bigger-than-device
+        path.  Op-for-op the sequential reference forward, hence bitwise
+        locked against it in tests/test_engine_parity.py."""
+        import time
+
+        from .streaming import StreamedEvaluator
+
+        if self._streamer is None:
+            self._streamer = StreamedEvaluator(self)
+        t0 = time.perf_counter()
+        micro, preds, cold_bytes = self._streamer.evaluate(
+            params, split, per_partition_params)
+        jax.block_until_ready((micro, preds))
+        self.cold_h2d_bytes += cold_bytes
+        self.last_eval_seconds = time.perf_counter() - t0
+        return micro, preds
 
     def export_serving_state(self, params) -> dict:
         """One full-refresh forward materializing the serving handoff
@@ -1204,6 +1419,17 @@ class SPMDEngine:
             raise ValueError(
                 "export_serving_state needs the combined-edge forward; "
                 "build the engine without overlap_halo")
+        shards = self.shards
+        if self.feat_store:
+            # the export forward wants the resident plane; reconstruct it
+            # host-side (bitwise the all-resident stack) and hand it in as
+            # the call argument — a one-shot transfer for the serving
+            # handoff, not part of the per-epoch cold-row accounting
+            shards = {k: v for k, v in self.shards.items()
+                      if not k.startswith("fs_")}
+            shards["features"] = jnp.asarray(
+                reconstruct_features(self._fs, self.max_nodes),
+                self.config.dtype)
         fwd_e = make_export_forward(self.model, self._fwd_meta,
                                     axis_name=AXIS, agg=self._mean_agg)
         if self.mode == "spmd":
@@ -1219,8 +1445,8 @@ class SPMDEngine:
                                     out_specs=out_specs)
         else:
             impl = jax.vmap(fwd_e, axis_name=AXIS, in_axes=(None, 0))
-        fn = self._compiled("export_serving", impl, params, self.shards)
-        out = fn(params, self.shards)
+        fn = self._compiled("export_serving", impl, params, shards)
+        out = fn(params, shards)
         if self.halo_cache:
             # the snapshot is exactly a full refresh: hand it to the cache
             self._halo_state = jax.tree.map(

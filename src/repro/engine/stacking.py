@@ -16,12 +16,36 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..graph.distributed import PartitionedGraph
+from ..graph.featstore import PartitionFeatStore, build_partition_feat_store
 from ..kernels.segment_agg import (BEC, BN, build_edge_blocks,
                                    build_transpose_blocks)
 
 __all__ = ["StackedBlocks", "build_stacked_vjp_blocks",
-           "build_stacked_split_vjp_blocks", "build_stacked_halo_cache",
-           "build_stacked_halo_residual", "stack_pytrees"]
+           "build_stacked_split_vjp_blocks", "build_stacked_feat_store",
+           "build_stacked_halo_cache", "build_stacked_halo_residual",
+           "stack_pytrees"]
+
+
+def build_stacked_feat_store(pg: PartitionedGraph, hot_frac: float,
+                             policy: str, dtype) -> tuple[dict, PartitionFeatStore]:
+    """Stacked device/host split of the feature plane (DESIGN.md §12).
+
+    Returns ``(device_entries, fs)``: ``device_entries`` holds the
+    shard-dict additions — ``fs_hot`` (P, H, D) resident hot rows plus the
+    ``fs_rows_hot``/``fs_rows_cold`` (P, H)/(P, C) int32 scatter maps —
+    ready to merge into the engine's stacked shards in place of
+    ``features``; ``fs`` is the underlying :class:`PartitionFeatStore`
+    whose ``cold`` (P, C, D) numpy array is the per-call host staging
+    buffer (it must stay OFF device — shipping it as a compiled-call
+    argument is the whole point of the store).
+    """
+    import jax.numpy as jnp
+
+    fs = build_partition_feat_store(pg, hot_frac, policy, np.dtype(dtype))
+    entries = {"fs_hot": jnp.asarray(fs.hot, dtype),
+               "fs_rows_hot": jnp.asarray(fs.rows_hot),
+               "fs_rows_cold": jnp.asarray(fs.rows_cold)}
+    return entries, fs
 
 
 def build_stacked_halo_cache(pg: PartitionedGraph,

@@ -1,0 +1,130 @@
+"""Partition-group streamed evaluation for the two-tier feature store
+(DESIGN.md §12).
+
+With ``feat_groups = G`` the stacked engine never materializes all P
+assembled ``(max_nodes, D)`` feature planes at once: the eval runs as an
+eager host-orchestrated loop that stages each partition's cold rows and
+assembles its plane only while that partition's group is being processed.
+Only layer 1 reads the raw feature planes, so the streaming is a two-pass
+schedule over that layer:
+
+  pass A   per group: assemble the group's planes, reduce each to its
+           ``(P, maxS, D)`` halo SEND buffer (the all_to_all payload —
+           tiny next to the plane), discard the planes;
+  pass B   per group: re-assemble (the cold rows are staged a second
+           time — the deliberate residency-for-traffic trade, counted),
+           land the halo rows from the stored send buffers, run the
+           layer-1 compute down to hidden width, discard the plane.
+
+Layers >= 2 are hidden-width and run over all P partitions with the plain
+explicit exchange.  Every op is the sequential reference's op
+(``_exchange`` / ``_full_forward_plain`` / ``_eval``) in the same order on
+bitwise-identical inputs (the featstore reconstruction invariant), so the
+streamed eval is bit-for-bit the all-resident eval — locked in
+tests/test_featstore.py.
+
+Peak feature bytes: ``P*H*D*B + G*C*D*B + G*maxN*D*B``
+(:func:`repro.graph.featstore.feat_peak_bytes` with ``groups=G``), which
+is what lets a graph whose stacked plane exceeds the all-resident
+footprint evaluate at all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.featstore import assemble_features
+
+__all__ = ["StreamedEvaluator"]
+
+
+class StreamedEvaluator:
+    """Eager streamed eval over an engine built with ``feat_groups``."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        # per-partition views of the aggregation structure (fs_* entries are
+        # consumed by the assembly itself, never by the forward)
+        agg_shards = {k: v for k, v in engine.shards.items()
+                      if not k.startswith("fs_")}
+        self._shards = [jax.tree.map(lambda x: x[p], agg_shards)
+                        for p in range(engine.num_parts)]
+
+    # ---------------------------------------------------------- primitives
+    def _assemble(self, p: int):
+        """Partition p's full feature plane, cold rows staged host->device
+        now (counted per staging — pass A and pass B each pay once)."""
+        eng = self.engine
+        cold_np = eng._fs.cold[p]
+        self._cold_bytes += cold_np.nbytes
+        return assemble_features(
+            eng.shards["fs_hot"][p], eng.shards["fs_rows_hot"][p],
+            jnp.asarray(cold_np), eng.shards["fs_rows_cold"][p],
+            eng.max_nodes)
+
+    def _exchange(self, hs: list) -> list:
+        """The sequential reference's explicit halo exchange, verbatim:
+        recv[q][p] = sent[p][q], scattered into each halo slot range."""
+        eng = self.engine
+        P = eng.num_parts
+        send_idx = eng.shards["send_idx"]
+        send_mask = eng.shards["send_mask"]
+        sent = [hs[p][send_idx[p]] * send_mask[p][..., None]
+                for p in range(P)]
+        return [self._land(hs[q], sent, q) for q in range(P)]
+
+    def _land(self, h, sent: list, q: int):
+        """Scatter partition q's received rows into its halo slots."""
+        eng = self.engine
+        recv = jnp.stack([sent[p][q] for p in range(eng.num_parts)])
+        flat_pos = eng.shards["recv_pos"][q].reshape(-1)
+        flat_val = recv.reshape(-1, h.shape[-1])
+        return h.at[flat_pos].set(flat_val.astype(h.dtype))
+
+    def _layer(self, h, lp, p: int, activate: bool):
+        eng = self.engine
+        agg = eng._mean_agg(h, self._shards[p])
+        out = h @ lp.w_self + agg @ lp.w_neigh + lp.b
+        return jax.nn.relu(out) if activate else out
+
+    # -------------------------------------------------------------- driver
+    def evaluate(self, params, split: str, per_partition_params: bool):
+        """``(micro (P,), preds (P, maxN), cold_h2d_bytes)`` for one eval."""
+        eng = self.engine
+        P = eng.num_parts
+        G = int(eng.config.feat_groups)
+        self._cold_bytes = 0
+        plist = ([jax.tree.map(lambda x: x[p], params) for p in range(P)]
+                 if per_partition_params else [params] * P)
+        num_layers = len(plist[0].layers)
+        send_idx = eng.shards["send_idx"]
+        send_mask = eng.shards["send_mask"]
+
+        # pass A: layer-1 send buffers from transiently assembled planes
+        sent = [None] * P
+        for g0 in range(0, P, G):
+            for p in range(g0, min(g0 + G, P)):
+                h = self._assemble(p)
+                sent[p] = h[send_idx[p]] * send_mask[p][..., None]
+                del h
+        # pass B: re-assemble per group, land halo rows, layer-1 compute
+        hs = [None] * P
+        for g0 in range(0, P, G):
+            for q in range(g0, min(g0 + G, P)):
+                h = self._land(self._assemble(q), sent, q)
+                hs[q] = self._layer(h, plist[q].layers[0], q, num_layers > 1)
+                del h
+        del sent
+        # hidden-width layers: all partitions resident, plain schedule
+        for i in range(1, num_layers):
+            hs = self._exchange(hs)
+            hs = [self._layer(hs[p], plist[p].layers[i], p,
+                              i < num_layers - 1) for p in range(P)]
+
+        micros, preds = [], []
+        for p in range(P):
+            pr = jnp.argmax(hs[p], axis=-1)
+            micros.append(eng._micro_of(pr, eng.labels[p],
+                                        eng.masks[split][p]))
+            preds.append(pr)
+        return jnp.stack(micros), jnp.stack(preds), self._cold_bytes

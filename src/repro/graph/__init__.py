@@ -6,6 +6,9 @@ from .distributed import (PartitionedGraph, build_partitioned_graph,
                           make_distributed_forward, make_overlap_forward,
                           make_pallas_mean_agg, make_pallas_split_agg,
                           make_ref_mean_agg, make_ref_split_agg)
+from .featstore import (FeatureBudgetError, GlobalFeatStore,
+                        PartitionFeatStore, build_global_feat_store,
+                        build_partition_feat_store, feat_peak_bytes)
 
 __all__ = [
     "CSRGraph", "SyntheticSpec", "make_benchmark", "BENCHMARKS",
@@ -13,4 +16,7 @@ __all__ = [
     "PartitionedGraph", "build_partitioned_graph", "make_distributed_forward",
     "make_overlap_forward", "make_pallas_mean_agg", "make_pallas_split_agg",
     "make_ref_mean_agg", "make_ref_split_agg",
+    "FeatureBudgetError", "GlobalFeatStore", "PartitionFeatStore",
+    "build_global_feat_store", "build_partition_feat_store",
+    "feat_peak_bytes",
 ]

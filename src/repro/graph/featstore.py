@@ -1,0 +1,250 @@
+"""Two-tier feature store: hot rows resident on device, cold rows staged
+from a pinned host store per compiled call (DESIGN.md §12).
+
+Features dominate graph memory — the DistDGLv2 hybrid CPU/GPU design keeps
+only a high-traffic subset resident and fetches the rest on demand.  Here
+the split is STATIC and score-ordered: each partition's ``own_cap`` local
+feature rows are ranked by a hot-set policy and the top ``hot_frac``
+fraction stays on device while the remainder lives in host numpy, shipped
+as a compiled-call argument whenever a trace needs the full feature plane.
+
+The load-bearing invariant is *bitwise reconstruction*: scattering the hot
+rows and the staged cold rows into a zero ``(max_nodes, D)`` plane
+reproduces ``PartitionedGraph.features[p]`` exactly —
+
+  * ``rows_hot`` and ``rows_cold`` PARTITION ``range(own_cap)`` (every
+    owned-capacity row is in exactly one tier; asserted property tier in
+    tests/test_featstore.py),
+  * every row at index >= ``n_own[p]`` of ``pg.features[p]`` is zero by
+    construction (halo rows arrive via exchange, pads are pads), so the
+    zero base plane is already correct there, and
+  * both tiers are cast to the target dtype with the SAME numpy cast the
+    all-resident engine applies to the whole stack (f32 -> f64 widening is
+    exact, so cast-then-gather == gather-then-cast bitwise).
+
+Because downstream forwards only ever read the assembled ``features``
+plane, the halo cache, wire compression and the overlap forward compose
+with the store untouched.
+
+Hot-set policies:
+
+  degree   rank by clamped in-degree (``pg.deg``) — high-degree rows are
+           read by the most aggregations per epoch;
+  freq     degree plus a dominating boost for training-set membership —
+           rows the sampled phase-0/1 batch gathers hit every epoch.
+
+Ties break by local row index (stable argsort), so the split is a pure
+function of the graph and the policy — deterministic across runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HOT_POLICIES", "FeatureBudgetError", "GlobalFeatStore",
+           "PartitionFeatStore", "assemble_features",
+           "build_global_feat_store", "build_partition_feat_store",
+           "check_feat_budget", "feat_peak_bytes", "hot_order",
+           "reconstruct_features"]
+
+HOT_POLICIES = ("degree", "freq")
+
+# dominates any clamped in-degree, so under the "freq" policy every
+# training row outranks every non-training row while degree still orders
+# rows within each class
+_FREQ_BOOST = 1e9
+
+
+class FeatureBudgetError(ValueError):
+    """Raised when a configuration's peak device feature bytes exceed the
+    declared ``feat_budget_mb`` — the engine refuses to build rather than
+    OOM mid-epoch.  A ``ValueError`` so existing config-validation handling
+    catches it."""
+
+
+def hot_order(scores) -> np.ndarray:
+    """Row indices in descending score order, ties broken by row index
+    (stable sort on the negated scores) — the one ranking primitive both
+    store builders share."""
+    return np.argsort(-np.asarray(scores, np.float64), kind="stable")
+
+
+def _hot_count(hot_frac: float, n: int) -> int:
+    if not 0.0 <= hot_frac <= 1.0:
+        raise ValueError(f"hot_frac must be in [0, 1], got {hot_frac}")
+    return min(max(int(round(hot_frac * n)), 0), n)
+
+
+def _scores(policy: str, deg: np.ndarray, is_train: np.ndarray) -> np.ndarray:
+    if policy not in HOT_POLICIES:
+        raise ValueError(f"unknown hot_policy {policy!r} "
+                         f"(expected one of {HOT_POLICIES})")
+    scores = np.asarray(deg, np.float64)
+    if policy == "freq":
+        scores = scores + _FREQ_BOOST * np.asarray(is_train, np.float64)
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# partition-local store (the engine's stacked feature plane)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PartitionFeatStore:
+    """Score-split owned feature rows of a :class:`PartitionedGraph`.
+
+    ``hot`` (P, H, D) is the device-resident tier, ``cold`` (P, C, D) the
+    pinned host staging buffer (H + C == own_cap); ``rows_hot``/``rows_cold``
+    are the local row ids each tier scatters back into.  All arrays are
+    target-dtype numpy — the caller moves ``hot`` on device once and ships
+    ``cold`` per compiled call.
+    """
+
+    hot: np.ndarray        # (P, H, D) target dtype
+    rows_hot: np.ndarray   # (P, H) int32 local row ids
+    cold: np.ndarray       # (P, C, D) target dtype, host-resident
+    rows_cold: np.ndarray  # (P, C) int32
+
+
+def build_partition_feat_store(pg, hot_frac: float, policy: str,
+                               dtype) -> PartitionFeatStore:
+    """Split each partition's ``own_cap`` feature rows into hot/cold tiers.
+
+    ``H = round(hot_frac * own_cap)`` is shared across partitions (the hot
+    tier must stack into one (P, H, D) array); ragged real row counts are
+    handled by the padding rows, which are all-zero and score lowest under
+    both policies' real signals.
+    """
+    dtype = np.dtype(dtype)
+    P, own_cap = pg.deg.shape
+    d = pg.features.shape[-1]
+    H = _hot_count(hot_frac, own_cap)
+    C = own_cap - H
+    feats = np.asarray(pg.features, dtype)
+    hot = np.empty((P, H, d), dtype)
+    cold = np.empty((P, C, d), dtype)
+    rows_hot = np.empty((P, H), np.int32)
+    rows_cold = np.empty((P, C), np.int32)
+    for p in range(P):
+        order = hot_order(_scores(policy, pg.deg[p],
+                                  pg.train_mask[p, :own_cap]))
+        rows_hot[p] = order[:H]
+        rows_cold[p] = order[H:]
+        hot[p] = feats[p, rows_hot[p]]
+        cold[p] = feats[p, rows_cold[p]]
+    return PartitionFeatStore(hot=hot, rows_hot=rows_hot,
+                              cold=cold, rows_cold=rows_cold)
+
+
+def assemble_features(hot, rows_hot, cold, rows_cold, max_nodes: int):
+    """On-trace reassembly of one partition's full feature plane:
+    ``zeros((max_nodes, D)) ∪ hot ∪ cold`` — bitwise equal to the
+    all-resident ``shard["features"]`` (see the module invariant).  Works
+    for empty tiers (``hot_frac`` 0.0 and 1.0): a zero-length scatter is a
+    no-op."""
+    d = hot.shape[-1]
+    base = jnp.zeros((max_nodes, d), hot.dtype)
+    return base.at[rows_hot].set(hot).at[rows_cold].set(
+        cold.astype(hot.dtype))
+
+
+def reconstruct_features(fs: PartitionFeatStore, max_nodes: int) -> np.ndarray:
+    """Host-side inverse of the split: the full (P, max_nodes, D) stack in
+    the store's dtype — what the serving export hands to the export forward
+    in place of the resident stack."""
+    P, _, d = fs.hot.shape
+    out = np.zeros((P, max_nodes, d), fs.hot.dtype)
+    for p in range(P):
+        out[p, fs.rows_hot[p]] = fs.hot[p]
+        out[p, fs.rows_cold[p]] = fs.cold[p]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# global store (the DeviceEpochSampler's gather table)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GlobalFeatStore:
+    """Score-split GLOBAL feature rows for the on-device epoch sampler.
+
+    Batches gather through ``remap`` into the concatenated ``[hot | cold]``
+    table: ``concat(hot, cold)[remap[i]] == features[i]`` bitwise for every
+    global node id i (``remap`` is a permutation of ``range(N)`` split at
+    ``Nh``).
+    """
+
+    hot: np.ndarray       # (Nh, D) target dtype, device-bound
+    remap: np.ndarray     # (N,) int32 global id -> [hot | cold] slot
+    cold: np.ndarray      # (Nc, D) target dtype, host-resident
+    hot_ids: np.ndarray   # (Nh,) global ids in score order
+    cold_ids: np.ndarray  # (Nc,)
+
+
+def build_global_feat_store(graph, hot_frac: float, policy: str,
+                            dtype) -> GlobalFeatStore:
+    dtype = np.dtype(dtype)
+    n = graph.num_nodes
+    feats = np.asarray(graph.features, dtype)
+    deg = np.maximum(np.diff(np.asarray(graph.indptr)), 1)
+    is_train = np.zeros(n, bool)
+    is_train[np.asarray(graph.train_idx)] = True
+    order = hot_order(_scores(policy, deg, is_train))
+    nh = _hot_count(hot_frac, n)
+    hot_ids = order[:nh]
+    cold_ids = order[nh:]
+    remap = np.empty(n, np.int32)
+    remap[hot_ids] = np.arange(nh, dtype=np.int32)
+    remap[cold_ids] = nh + np.arange(n - nh, dtype=np.int32)
+    return GlobalFeatStore(hot=feats[hot_ids], remap=remap,
+                           cold=feats[cold_ids],
+                           hot_ids=hot_ids, cold_ids=cold_ids)
+
+
+# ---------------------------------------------------------------------------
+# feature-memory budget (the bigger-than-device gate)
+# ---------------------------------------------------------------------------
+
+def feat_peak_bytes(num_parts: int, max_nodes: int, feat_dim: int,
+                    itemsize: int, *, hot_rows: int | None = None,
+                    cold_rows: int = 0, groups: int = 0) -> int:
+    """Closed-form PEAK device feature bytes of a configuration.
+
+    All-resident (``hot_rows is None``): the stacked plane itself,
+    ``P * maxN * D * B``.
+
+    Feat-store: the resident hot tier plus the worst transient — staged
+    cold rows and the assembled plane of every partition a single compiled
+    call materializes at once.  ``groups == 0`` (no streaming) assembles
+    all P partitions inside one eval program; ``groups == G`` streams the
+    eval over G-partition groups, so only G cold buffers + G assembled
+    planes exist at a time:
+
+        P*H*D*B  +  G'*C*D*B  +  G'*maxN*D*B      with G' = G or P
+    """
+    b = int(itemsize)
+    if hot_rows is None:
+        return num_parts * max_nodes * feat_dim * b
+    g = groups if groups else num_parts
+    return (num_parts * hot_rows * feat_dim * b
+            + g * cold_rows * feat_dim * b
+            + g * max_nodes * feat_dim * b)
+
+
+def check_feat_budget(budget_mb: float, peak_bytes: int,
+                      context: str = "") -> None:
+    """Refuse-to-build guard: raise :class:`FeatureBudgetError` when the
+    configuration's peak feature bytes exceed ``budget_mb`` (<= 0 disables
+    the check)."""
+    if budget_mb <= 0:
+        return
+    budget = budget_mb * 1e6
+    if peak_bytes > budget:
+        raise FeatureBudgetError(
+            f"peak device feature bytes {peak_bytes} exceed "
+            f"feat_budget_mb={budget_mb:g} ({int(budget)} bytes)"
+            + (f" [{context}]" if context else "")
+            + "; enable feat_store / lower hot_frac / set feat_groups "
+              "to stream the eval over partition groups")

@@ -176,4 +176,13 @@ BENCHMARKS: dict[str, SyntheticSpec] = {
         feature_dim=64, class_zipf=1.6, homophily=0.8, feature_noise=0.5,
         train_frac=0.12, val_frac=0.03, ood_test=True, seed=7,
     ),
+    # wide-feature benchmark for the two-tier feature store: the stacked
+    # (P, maxN, D) feature plane is the dominant array, so a feat_budget_mb
+    # between the streamed feat-store peak and the all-resident footprint
+    # demonstrates a graph that only trains with --feat-store (DESIGN.md §12)
+    "featstore-xl": SyntheticSpec(
+        name="featstore-xl", num_nodes=16_000, avg_degree=10, num_classes=16,
+        feature_dim=96, class_zipf=1.2, homophily=0.75, feature_noise=0.5,
+        train_frac=0.20, val_frac=0.05, seed=8,
+    ),
 }

@@ -77,6 +77,11 @@ def run_gnn(args) -> dict:
         checkpoint_every=args.checkpoint_every,
         keep_checkpoints=args.keep_checkpoints,
         resume=args.resume,
+        feat_store=args.feat_store,
+        hot_frac=args.hot_frac,
+        hot_policy=args.hot_policy,
+        feat_groups=args.feat_groups,
+        feat_budget_mb=args.feat_budget_mb,
     )
     fault_plan = None
     if args.crash_at_epoch or args.drop_refresh_at:
@@ -281,6 +286,28 @@ def main() -> int:
                    help="hard phase split: fraction of --epochs spent "
                         "generalizing (default: loss-driven trigger; "
                         "async runs default to 0.4)")
+    g.add_argument("--feat-store", action="store_true",
+                   help="two-tier feature store: keep the top --hot-frac "
+                        "of each partition's feature rows resident on "
+                        "device and stage the cold remainder from host "
+                        "numpy per compiled call (DESIGN.md §12)")
+    g.add_argument("--hot-frac", type=float, default=0.5,
+                   help="fraction of feature rows kept device-resident "
+                        "with --feat-store (0.0..1.0; 1.0 = all resident, "
+                        "zero cold traffic)")
+    g.add_argument("--hot-policy", default="degree",
+                   choices=("degree", "freq"),
+                   help="hot-set ranking: clamped in-degree, or degree "
+                        "with a dominating boost for training-set rows")
+    g.add_argument("--feat-groups", type=int, default=0,
+                   help="stream the eval forward over groups of G <= parts "
+                        "partitions (stacked mode, needs --feat-store): "
+                        "only G assembled feature planes exist at once, so "
+                        "graphs bigger than the stacked plane still run")
+    g.add_argument("--feat-budget-mb", type=float, default=0.0,
+                   help="refuse to build when peak device feature bytes "
+                        "exceed this budget (0 disables) — the "
+                        "bigger-than-device gate")
 
     l = sub.add_parser("llm")
     l.add_argument("--arch", default="llama3.2-1b")

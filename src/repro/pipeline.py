@@ -156,6 +156,19 @@ class EATConfig:
     checkpoint_every: int = 1
     keep_checkpoints: int = 3
     resume: bool = False
+    # two-tier feature store (DESIGN.md §12): keep the top hot_frac of each
+    # partition's feature rows (by hot_policy score) resident on device and
+    # stage the cold remainder from host numpy per compiled call; the device
+    # sampler's gather table splits the same way.  feat_groups > 0 streams
+    # the eval over G-partition groups (stacked mode only) so a feature
+    # matrix bigger than the stacked plane still evaluates; feat_budget_mb
+    # makes the engine refuse to build when peak device feature bytes
+    # exceed the budget (<= 0 disables)
+    feat_store: bool = False
+    hot_frac: float = 0.5
+    hot_policy: str = "degree"            # degree | freq
+    feat_groups: int = 0
+    feat_budget_mb: float = 0.0
     # float dtype of the feature/mask path ("float32" | "float64"); float64
     # needs jax_enable_x64 and is what the fp64 resume-parity oracles run
     dtype: str = "float32"
@@ -202,8 +215,18 @@ class EATResult:
     phase0_iter_history: list[int] = field(default_factory=list)
     # TOTAL host→device payload across all phase-0 epochs: stacked batch
     # arrays on the host-sampled path, just the (P, 2) PRNG keys per epoch
-    # on the async path (divide by epochs for the per-epoch payload)
+    # on the async path (divide by epochs for the per-epoch payload) —
+    # plus, under the feature store, the cold rows staged for phase-0's
+    # compiled calls (train gathers and the per-epoch validation eval)
     host_to_device_bytes_phase0: int = 0
+    # phase-1's cold-row staging traffic (async epoch gathers, per-epoch
+    # val evals AND the final test eval); 0 without the feature store
+    host_to_device_bytes_phase1: int = 0
+    # device-resident feature bytes (engine plane/hot tier + attached
+    # sampler table) — the footprint the feature store shrinks
+    resident_feature_bytes: int = 0
+    # total cold-row host->device staging bytes (both phases)
+    cold_h2d_bytes: int = 0
     # mean phase-0 epoch period INCLUDING the validation eval's 1/N share —
     # the apples-to-apples number against the fused async epoch, whose one
     # device call is inseparable from its eval (epoch_time_s excludes eval
@@ -256,6 +279,13 @@ class EATResult:
                 if self.phase0_iter_history else 0.0),
             "host_to_device_mb_phase0": round(
                 self.host_to_device_bytes_phase0 / 1e6, 3),
+            "host_to_device_mb_phase1": round(
+                self.host_to_device_bytes_phase1 / 1e6, 3),
+            "feat_store": self.config.feat_store,
+            "hot_frac": self.config.hot_frac,
+            "resident_feature_mb": round(
+                self.resident_feature_bytes / 1e6, 3),
+            "cold_h2d_mb": round(self.cold_h2d_bytes / 1e6, 3),
             "resumed_from_epoch": self.resumed_from_epoch,
             "straggler_delay_s": round(self.straggler_delay_s, 3),
         }
@@ -345,6 +375,16 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             "halo_cache is an eval-forward optimisation; full_graph_train "
             "differentiates through the live halo exchange and cannot train "
             "against stale cached embeddings")
+    if cfg.feat_store and cfg.full_graph_train:
+        raise ValueError(
+            "full_graph_train differentiates through the resident feature "
+            "stack; the feature store's staged cold tier has no training "
+            "spelling — run full-graph training all-resident")
+    if cfg.feat_groups and cfg.async_generalize:
+        raise ValueError(
+            "feat_groups streams the eval host-side, which cannot live "
+            "inside the fused async phase-0 program — run the host-batch "
+            "phase-0 path (async_generalize=False) when streaming")
     fdt = np.dtype(cfg.dtype)
     graph = make_benchmark(BENCHMARKS[cfg.dataset])
     n_parts = 1 if cfg.centralized else cfg.num_parts
@@ -387,7 +427,12 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
                             halo_compress=cfg.halo_compress,
                             grad_compress=cfg.grad_compress,
                             grad_topk_frac=cfg.grad_topk_frac,
-                            grad_bucket_kb=cfg.grad_bucket_kb))
+                            grad_bucket_kb=cfg.grad_bucket_kb,
+                            feat_store=cfg.feat_store,
+                            hot_frac=cfg.hot_frac,
+                            hot_policy=cfg.hot_policy,
+                            feat_groups=cfg.feat_groups,
+                            feat_budget_mb=cfg.feat_budget_mb))
     if verbose:
         print(f"engine[{engine.mode}] {pg.summary()}")
 
@@ -519,7 +564,9 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             dev_sampler = build_device_epoch_sampler(
                 graph, host_train, n_parts, batch_size=cfg.batch_size,
                 subset_fraction=cfg.subset_fraction if cfg.use_cbs else 1.0,
-                class_balanced=cfg.use_cbs, fanouts=cfg.fanouts)
+                class_balanced=cfg.use_cbs, fanouts=cfg.fanouts,
+                feat_store=cfg.feat_store, hot_frac=cfg.hot_frac,
+                hot_policy=cfg.hot_policy)
         return dev_sampler
 
     if async_phase0:
@@ -550,8 +597,20 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
                                    pg.halo_bytes_per_layer)))
 
     host_to_device_p0 = 0
+    host_to_device_p1 = 0
     p0_iter_hist: list[int] = []
     straggler_total = 0.0
+
+    # cold-row staging is counted inside the engine (where the numpy buffer
+    # is handed to a compiled call); the pipeline reads per-epoch DELTAS to
+    # attribute the traffic to the phase that paid it
+    cold_mark = int(getattr(engine, "cold_h2d_bytes", 0))
+
+    def cold_delta() -> int:
+        nonlocal cold_mark
+        now = int(getattr(engine, "cold_h2d_bytes", 0))
+        d, cold_mark = now - cold_mark, now
+        return d
 
     # ---------------- checkpoint/resume (DESIGN.md §10) --------------------
     ckpt = (RunCheckpointer(cfg.checkpoint_dir,
@@ -562,7 +621,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
                    "dtype": cfg.dtype, "engine": engine.mode,
                    "halo_cache": cfg.halo_cache,
                    "halo_compress": cfg.halo_compress,
-                   "grad_compress": cfg.grad_compress}
+                   "grad_compress": cfg.grad_compress,
+                   "feat_store": cfg.feat_store,
+                   "hot_frac": cfg.hot_frac if cfg.feat_store else 0.0,
+                   "hot_policy": cfg.hot_policy if cfg.feat_store else ""}
 
     def halo_ckpt_state():
         if cfg.halo_cache and hasattr(engine, "halo_cache_state"):
@@ -622,6 +684,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             halo_exchange_hist = [int(x) for x in host["halo_exchange_hist"]]
             p0_iter_hist = [int(x) for x in host["p0_iter_hist"]]
             host_to_device_p0 = int(host["host_to_device_p0"])
+            host_to_device_p1 = int(host.get("host_to_device_p1", 0))
             straggler_total = float(host.get("straggler_s", 0.0))
             if "halo" in arrays:
                 engine.restore_halo_cache_state(arrays["halo"],
@@ -652,6 +715,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             "halo_exchange_hist": [int(x) for x in halo_exchange_hist],
             "p0_iter_hist": [int(x) for x in p0_iter_hist],
             "host_to_device_p0": int(host_to_device_p0),
+            "host_to_device_p1": int(host_to_device_p1),
             "straggler_s": straggler_total,
             "fingerprint": fingerprint,
         }
@@ -736,6 +800,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             ex = eval_exchange_bytes()
             halo_exchange_hist.append(ex)
             comm_halo_p0 += ex + fetch_bytes_per_epoch
+        host_to_device_p0 += cold_delta()
         comm_grad += grad_bytes_per_sync * iters
         p0_iter_hist.append(int(iters))
         host_time = epoch_host_times(t_host, t_dev)
@@ -842,6 +907,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
             ex = eval_exchange_bytes()
             halo_exchange_hist.append(ex)
             comm_halo_p1 += ex + fetch_bytes_per_epoch
+            host_to_device_p1 += cold_delta()
             scores = np.asarray(val_micro)
             is_best = ctrl.record_phase1(scores)
             phase1_epochs += 1
@@ -874,6 +940,7 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
     # ---------------- final evaluation -------------------------------------
     _, preds = engine.evaluate(final_stacked, "test",
                                per_partition_params=True)
+    host_to_device_p1 += cold_delta()    # the test eval's cold staging
     preds = np.asarray(preds)
     test_mask = np.asarray(pg.test_mask)
     labels = np.asarray(pg.labels)
@@ -909,6 +976,10 @@ def run_eat_distgnn(cfg: EATConfig, verbose: bool = False,
         host_draws_phase0=host_draws_p0,
         phase0_iter_history=p0_iter_hist,
         host_to_device_bytes_phase0=host_to_device_p0,
+        host_to_device_bytes_phase1=host_to_device_p1,
+        resident_feature_bytes=int(getattr(engine,
+                                           "resident_feature_bytes", 0)),
+        cold_h2d_bytes=int(getattr(engine, "cold_h2d_bytes", 0)),
         final_params=final_stacked,
         resumed_from_epoch=resumed_from,
         straggler_delay_s=straggler_total,

@@ -40,6 +40,12 @@
    sequential fp64 oracle bit-for-bit (the oracle models the quantize /
    dequantize / residual arithmetic exactly); compress=off stays bitwise
    the pre-PR-9 forward; ring schedules and the halo cache compose.
+10. Two-tier feature store (PR-10): the feat-store engine (hot rows
+   resident, cold rows staged from the host per compiled call) equals the
+   all-resident engine bit-for-bit — sync phases, hot_frac extremes, the
+   fused async epochs with a feat-store device sampler, and the halo-cache
+   / int8 compositions — in BOTH stacked and real-mesh shard_map modes;
+   hot_frac=1.0 stages zero cold bytes.
 
 Flaky-surface hardening: ALL fast fp64 checks (1–3) share ONE subprocess
 per module (one interpreter + one set of XLA compilations), and every
@@ -525,6 +531,82 @@ def run_async_parity(eng, seq, g, host_train, model, opt, seed, dtype):
             "loss": float(np.abs(np.asarray(lA)
                                  - np.asarray(lB)[:i_run]).max()),
             "val": float(np.abs(np.asarray(vA) - np.asarray(vB)).max())}
+
+
+def run_featstore_parity(pg, g, host_train, model, loss_fn, opt, samplers,
+                         make_batch, seed, dtype):
+    '''Two-tier feature store parity (the PR-10 tentpole):
+      1. sync phases + test eval: the feat-store engine (hot rows resident,
+         cold rows staged host-side per compiled call) == the all-resident
+         engine bit-for-bit through run_pair;
+      2. hot_frac extremes: 0.0 (everything staged) and 1.0 (everything
+         resident, ZERO cold bytes) both reproduce the resident eval;
+      3. compositions: feat_store x PR-6 halo cache and feat_store x PR-9
+         int8 halo quantization each == the same composition all-resident;
+      4. the fully-fused async epochs (phase-0 epoch program and phase-1
+         budgeted scan) with a feat-store device sampler == the all-resident
+         sampler running the SAME PRNG programs.'''
+    kw = dict(mode="stacked", use_pallas_agg=False, dtype=dtype)
+    mk = lambda **o: SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                                EngineConfig(**kw, **o))
+    out = {}
+    base = mk()
+    fs = mk(feat_store=True, hot_frac=0.25)
+    for k, v in run_pair(fs, base, model, opt, samplers, make_batch,
+                         seed, dtype).items():
+        out[f"sync_{k}"] = v
+    params = jax.tree.map(lambda x: jnp.asarray(x, dtype), model.init(seed))
+    pseq = [jax.tree.map(lambda x: x * (1.0 + 0.05 * i), params)
+            for i in range(3)]
+    cases = [("hot0", dict(hot_frac=0.0), {}),
+             ("hot1", dict(hot_frac=1.0), {}),
+             ("cache", dict(hot_frac=0.25, halo_cache=True,
+                            halo_refresh_every=2),
+              dict(halo_cache=True, halo_refresh_every=2)),
+             ("int8", dict(hot_frac=0.25, halo_compress="int8"),
+              dict(halo_compress="int8"))]
+    for tag, fso, refo in cases:
+        eA = mk(feat_store=True, **fso)
+        eB = mk(**refo)
+        d = 0.0
+        for prm in pseq:
+            mA, prA = eA.evaluate(prm, "val", per_partition_params=False)
+            mB, prB = eB.evaluate(prm, "val", per_partition_params=False)
+            d = max(d, float(jnp.abs(mA - mB).max()),
+                    float((np.asarray(prA) != np.asarray(prB)).sum()))
+        out[f"{tag}_eval"] = d
+        if tag == "hot1":           # all-hot must never stage a cold byte
+            out["hot1_cold_bytes"] = float(eA.cold_h2d_bytes)
+    dsF = build_device_epoch_sampler(g, host_train, P, batch_size=BATCH,
+                                     subset_fraction=0.25,
+                                     class_balanced=True, fanouts=(3, 3),
+                                     dtype=dtype, feat_store=True,
+                                     hot_frac=0.25)
+    dsR = build_device_epoch_sampler(g, host_train, P, batch_size=BATCH,
+                                     subset_fraction=0.25,
+                                     class_balanced=True, fanouts=(3, 3),
+                                     dtype=dtype)
+    fs.set_device_sampler(dsF)
+    base.set_device_sampler(dsR)
+    opt_state = opt.init(params)
+    keys = jax.random.split(jax.random.PRNGKey(seed ^ 0x10FE), P)
+    pA, oA, lA, vA, _ = fs.phase0_epoch_async(params, opt_state, keys)
+    pB, oB, lB, vB, _ = base.phase0_epoch_async(params, opt_state, keys)
+    out["p0a_params"] = tree_maxdiff(pA, pB)
+    out["p0a_opt"] = tree_maxdiff(oA, oB)
+    out["p0a_loss"] = float(np.abs(np.asarray(lA) - np.asarray(lB)).max())
+    out["p0a_val"] = float(np.abs(np.asarray(vA) - np.asarray(vB)).max())
+    pp = broadcast_to_partitions(pA, P)
+    po = jax.vmap(opt.init)(pp)
+    budgets = jnp.asarray(
+        np.minimum(np.arange(P), dsF.num_batches).astype(np.int32))
+    ppA, poA, l1A, v1A, _ = fs.phase1_epoch_async(pp, po, keys, budgets, pA)
+    ppB, poB, l1B, v1B, _ = base.phase1_epoch_async(pp, po, keys, budgets, pB)
+    out["p1a_params"] = tree_maxdiff(ppA, ppB)
+    out["p1a_opt"] = tree_maxdiff(poA, poB)
+    out["p1a_loss"] = float(np.abs(np.asarray(l1A) - np.asarray(l1B)).max())
+    out["p1a_val"] = float(np.abs(np.asarray(v1A) - np.asarray(v1B)).max())
+    return out
 """
 
 # --------------------------------------------------------------------------
@@ -569,6 +651,9 @@ out["halo_cache_async"] = run_halo_cache_async_parity(pg, g, host_train,
 out["comm_compress"] = run_comm_compress_parity(pg, model, loss_fn, opt,
                                                 samplers, make_batch, 0,
                                                 jnp.float64)
+out["featstore"] = run_featstore_parity(pg, g, host_train, model, loss_fn,
+                                        opt, samplers, make_batch, 0,
+                                        jnp.float64)
 print("RESULTS", json.dumps(out))
 """
 )
@@ -662,6 +747,17 @@ def test_comm_compress_parity_fp64(fp64_shared):
     accounting)."""
     assert all(v == 0 for v in fp64_shared["comm_compress"].values()), \
         fp64_shared["comm_compress"]
+
+
+def test_featstore_parity_fp64(fp64_shared):
+    """PR-10: the two-tier feature store is bitwise invisible — training +
+    eval through the feat-store engine (sync run_pair phases, hot_frac 0.0
+    and 1.0 extremes, the fused async phase-0/phase-1 epochs with a
+    feat-store device sampler, and the compositions with the halo cache and
+    int8 halo quantization) all equal the all-resident engine bit-for-bit,
+    and hot_frac=1.0 stages zero cold bytes."""
+    assert all(v == 0 for v in fp64_shared["featstore"].values()), \
+        fp64_shared["featstore"]
 
 
 # --------------------------------------------------------------------------
@@ -798,6 +894,28 @@ hlo_cached = jax.jit(lambda p, c: engD._eval_spmd_cached(
     p, c, "val", False, (0, 0))).lower(base, engD._halo_state).as_text()
 d["hlo_collective_witness"] = float("all_to_all" not in hlo_full
                                     or "all_to_all" in hlo_cached)
+# feat-store on the REAL mesh: the hot/cold split (and its halo-cache /
+# int8-quantization compositions) is bitwise invisible under shard_map too —
+# the staged cold tier enters the program before any collective runs
+for tag, o in (("plain", {}),
+               ("cache", dict(halo_cache=True, halo_refresh_every=2)),
+               ("int8", dict(halo_compress="int8"))):
+    eF = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                    EngineConfig(mode="spmd", use_pallas_agg=False,
+                                 dtype=jnp.float64, feat_store=True,
+                                 hot_frac=0.25, **o))
+    assert eF.mode == "spmd", eF.mode
+    eR = SPMDEngine(model, loss_fn, opt, pg, GPHyperParams(),
+                    EngineConfig(mode="spmd", use_pallas_agg=False,
+                                 dtype=jnp.float64, **o))
+    fd = 0.0
+    for i in range(3):
+        prm = jax.tree.map(lambda x: x * (1.0 + 0.1 * i), base)
+        mF, prF = eF.evaluate(prm, "val", per_partition_params=False)
+        mR, prR = eR.evaluate(prm, "val", per_partition_params=False)
+        fd = max(fd, float(jnp.abs(mF - mR).max()),
+                 float((np.asarray(prF) != np.asarray(prR)).sum()))
+    d[f"spmd_featstore_{tag}"] = fd
 print("RESULTS", json.dumps(d))
 """
 )
